@@ -1,0 +1,117 @@
+"""Shared benchmark pipeline: a properly-trained reduced DeepSeek-V2-Lite
+backbone + train/test trace sets, cached under artifacts/ so every paper
+figure/table reads the same experiment."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+BACKBONE_STEPS = 900
+N_TRAIN_TRACES = 64
+N_TEST_TRACES = 16
+TRACE_LEN = 72          # prompt 16 + 56 generated
+PROMPT_LEN = 16
+
+
+def backbone_and_traces(fresh: bool = False, log=print):
+    """Returns (cfg, model, params, train_traces, test_traces)."""
+    from repro.configs import get_reduced
+    from repro.core.tracing import collect_traces, load_traces, save_traces
+    from repro.data import make_topic_corpus, sample_prompts
+    from repro.launch.train import train
+    from repro.models import build_model
+    from repro.training import checkpoint as ckpt
+
+    os.makedirs(ART, exist_ok=True)
+    cfg = get_reduced("deepseek-v2-lite")
+    model = build_model(cfg)
+    ck = os.path.join(ART, "backbone.npz")
+    tr_path = os.path.join(ART, "traces_train.npz")
+    te_path = os.path.join(ART, "traces_test.npz")
+
+    if not fresh and all(os.path.exists(p) for p in (ck, tr_path, te_path)):
+        params = ckpt.load(ck, jax.eval_shape(model.init,
+                                              jax.random.PRNGKey(0)))
+        params = jax.tree.map(jnp.asarray, params)
+        return (cfg, model, params, load_traces(tr_path),
+                load_traces(te_path))
+
+    t0 = time.time()
+    log(f"[common] training backbone ({BACKBONE_STEPS} steps)...")
+    params, losses = train("deepseek-v2-lite", reduced=True,
+                           steps=BACKBONE_STEPS, batch_size=16, seq_len=64,
+                           lr=3e-3, log=log)
+    ckpt.save(ck, params)
+    log(f"[common] backbone done ({time.time() - t0:.0f}s, "
+        f"final loss {losses[-1]:.3f})")
+
+    corpus = make_topic_corpus(cfg.vocab_size, n_topics=8, seed=0)
+    log(f"[common] collecting {N_TRAIN_TRACES}+{N_TEST_TRACES} traces...")
+    # train traces: topic corpus (stands in for Puffin)
+    train_prompts = sample_prompts(corpus, N_TRAIN_TRACES, PROMPT_LEN,
+                                   seed=10)
+    train_traces = collect_traces(model, params, train_prompts,
+                                  max_new=TRACE_LEN - PROMPT_LEN,
+                                  cache_len=TRACE_LEN, seed=0)
+    # test traces: DIFFERENT seed + slight topic shift (stands in for
+    # WebGLM-QA generalization)
+    corpus_test = make_topic_corpus(cfg.vocab_size, n_topics=8, seed=7)
+    test_prompts = sample_prompts(corpus_test, N_TEST_TRACES, PROMPT_LEN,
+                                  seed=99)
+    test_traces = collect_traces(model, params, test_prompts,
+                                 max_new=TRACE_LEN - PROMPT_LEN,
+                                 cache_len=TRACE_LEN, seed=1)
+    save_traces(tr_path, train_traces)
+    save_traces(te_path, test_traces)
+    log(f"[common] traces done ({time.time() - t0:.0f}s total)")
+    return cfg, model, params, train_traces, test_traces
+
+
+def predictor_cfg(cfg, n_moe):
+    from repro.configs.base import PredictorConfig
+    return PredictorConfig(
+        token_emb_dim=cfg.d_model, num_model_layers=n_moe,
+        num_experts=cfg.moe.num_experts, layer_emb_dim=32, d_model=96,
+        num_layers=4, num_heads=8, d_ff=192, max_seq=TRACE_LEN,
+        top_k=cfg.moe.top_k, dropout=0.1)
+
+
+def trained_predictor(fresh: bool = False, log=print):
+    """Returns (pcfg, predictor_params, history, traces bundle)."""
+    import pickle
+
+    from repro.core.predictor_train import train_predictor
+    from repro.core.tracing import moe_layer_ids
+    from repro.training import checkpoint as ckpt
+    from repro.core.predictor import predictor_init
+
+    bundle = backbone_and_traces(fresh, log)
+    cfg, model, params, train_traces, test_traces = bundle
+    n_moe = len(moe_layer_ids(cfg))
+    pcfg = predictor_cfg(cfg, n_moe)
+
+    pk = os.path.join(ART, "predictor.npz")
+    hk = os.path.join(ART, "predictor_hist.pkl")
+    if not fresh and os.path.exists(pk) and os.path.exists(hk):
+        template = jax.eval_shape(
+            lambda: predictor_init(jax.random.PRNGKey(0), pcfg))
+        pp = jax.tree.map(jnp.asarray, ckpt.load(pk, template))
+        with open(hk, "rb") as f:
+            hist = pickle.load(f)
+        return pcfg, pp, hist, bundle
+
+    log("[common] training predictor (paper §3.2.3 protocol)...")
+    pp, hist = train_predictor(train_traces, test_traces, pcfg, epochs=16,
+                               batch_size=4, base_lr=3e-3, patience=5,
+                               log=log)
+    ckpt.save(pk, pp)
+    with open(hk, "wb") as f:
+        pickle.dump(hist, f)
+    return pcfg, pp, hist, bundle

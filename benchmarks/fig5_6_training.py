@@ -1,0 +1,25 @@
+"""Paper Figs 5-6: predictor training/validation dynamics (accuracy, F1,
+loss per epoch)."""
+from __future__ import annotations
+
+
+def run(log=print):
+    from benchmarks.common import trained_predictor
+    pcfg, pp, hist, bundle = trained_predictor(log=log)
+    log("  epoch,train_loss,train_acc,train_f1,val_loss,val_acc,val_f1")
+    for i in range(len(hist.train_loss)):
+        log(f"  {i},{hist.train_loss[i]:.4f},{hist.train_acc[i]:.4f},"
+            f"{hist.train_f1[i]:.4f},{hist.val_loss[i]:.4f},"
+            f"{hist.val_acc[i]:.4f},{hist.val_f1[i]:.4f}")
+    out = {
+        "fig5_final_train_acc": hist.train_acc[-1],
+        "fig5_final_train_f1": hist.train_f1[-1],
+        "fig5_final_train_loss": hist.train_loss[-1],
+        "fig6_final_val_acc": hist.val_acc[-1],
+        "fig6_final_val_f1": hist.val_f1[-1],
+        "fig6_final_val_loss": hist.val_loss[-1],
+        "fig6_train_val_f1_gap": abs(hist.train_f1[-1] - hist.val_f1[-1]),
+    }
+    for k, v in out.items():
+        log(f"  {k} = {v:.4f}")
+    return out

@@ -1,0 +1,68 @@
+"""Beyond-paper: multi-layer prediction horizon (the paper's §5/§6 stated
+future work — its predictor sees only ONE layer ahead, so DMA can overlap
+only one layer's compute).
+
+We train the same predictor with horizon H=2 (two sigmoid blocks: experts
+of layer l and layer l+1 from the same context) and measure how much
+look-ahead quality degrades with depth — the number that decides whether a
+deeper prefetch pipeline is worth it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(log=print):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import backbone_and_traces, predictor_cfg
+    from repro.core import metrics as M
+    from repro.core.predictor import predictor_apply
+    from repro.core.predictor_train import train_predictor
+    from repro.core.tracing import moe_layer_ids
+
+    cfg, model, params, train_traces, test_traces = backbone_and_traces(
+        log=log)
+    n_moe = len(moe_layer_ids(cfg))
+    pcfg = dataclasses.replace(predictor_cfg(cfg, n_moe), horizon=2)
+
+    log("[horizon] training horizon-2 predictor...")
+    pp, hist = train_predictor(train_traces, test_traces, pcfg, epochs=12,
+                               batch_size=4, base_lr=3e-3, patience=4,
+                               log=log)
+
+    apply = jax.jit(lambda e, l, m: predictor_apply(pp, pcfg, e, l, m))
+    e_dim = pcfg.num_experts
+    hits = {0: [0, 0], 1: [0, 0]}
+    for tr in test_traces:
+        t = min(tr.num_tokens, pcfg.max_seq)
+        emb = jnp.asarray(tr.embeddings[None, :t])
+        mask = jnp.ones((1, t), bool)
+        for layer in range(n_moe):
+            logits = np.asarray(apply(
+                emb, jnp.full((1, t), layer, jnp.int32), mask))[0]
+            for h in range(pcfg.horizon):
+                ll = layer + h
+                if ll >= n_moe:
+                    continue
+                sel = M.select_experts(
+                    logits[:, h * e_dim:(h + 1) * e_dim], pcfg.top_k, -1e9)
+                for tok in range(t):
+                    gt = set(tr.experts[tok, ll].tolist())
+                    pred = set(np.nonzero(sel[tok])[0].tolist())
+                    hits[h][0] += len(gt & pred)
+                    hits[h][1] += len(gt)
+    out = {}
+    for h in range(pcfg.horizon):
+        ph = hits[h][0] / max(hits[h][1], 1)
+        out[f"horizon_slot{h}_pred_hit"] = ph
+        log(f"  pred-hit @ +{h + 1} layer look-ahead: {ph:.4f}")
+    out["horizon_degradation"] = (out["horizon_slot0_pred_hit"]
+                                  - out["horizon_slot1_pred_hit"])
+    log(f"  degradation per extra layer of look-ahead: "
+        f"{out['horizon_degradation']:.4f} "
+        f"(small => deeper prefetch pipelines are viable)")
+    return out

@@ -1,0 +1,47 @@
+"""§Roofline: per (arch x shape) three-term roofline table, read from the
+dry-run artifacts (dryrun_single_pod.json / dryrun_multi_pod.json)."""
+from __future__ import annotations
+
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    p = os.path.join(REPO, path)
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def run(log=print):
+    out = {}
+    for tag, path in (("1pod", "dryrun_single_pod.json"),
+                      ("2pod", "dryrun_multi_pod.json")):
+        rs = load(path)
+        if rs is None:
+            log(f"  [{tag}] missing {path}; run: PYTHONPATH=src python -m "
+                f"repro.launch.dryrun --all --json {path}"
+                + (" --multi-pod" if tag == "2pod" else ""))
+            continue
+        log(f"  [{tag}] arch,shape,compute_s,memory_s,collective_s,"
+            f"dominant,useful_ratio,peak_GiB_per_dev")
+        for r in rs:
+            if r["status"] != "ok":
+                log(f"  [{tag}] {r['arch']},{r['shape']},{r['status']}"
+                    f"({r.get('reason', '')})")
+                continue
+            t = r["terms_s"]
+            peak = r["bytes_per_device"]["peak"] / 2 ** 30
+            log(f"  [{tag}] {r['arch']},{r['shape']},{t['compute_s']:.4g},"
+                f"{t['memory_s']:.4g},{t['collective_s']:.4g},"
+                f"{r['dominant'].replace('_s', '')},"
+                f"{r['useful_ratio']:.3f},{peak:.2f}")
+            out[f"{tag}_{r['arch']}_{r['shape']}_dominant"] = r["dominant"]
+        n_ok = sum(1 for r in rs if r["status"] == "ok")
+        n_skip = sum(1 for r in rs if r["status"] == "skip")
+        n_fail = len(rs) - n_ok - n_skip
+        out[f"{tag}_ok"] = n_ok
+        log(f"  [{tag}] {n_ok} ok / {n_skip} skip / {n_fail} fail")
+    return out

@@ -1,0 +1,75 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+Prints ``name,us_per_call,derived`` CSV rows; artifacts cached in artifacts/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7_cache_hit] [--fresh]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig1_3_sparsity", "benchmarks.fig1_3_sparsity",
+     "paper Figs 1-3: activation sparsity"),
+    ("fig5_6_training", "benchmarks.fig5_6_training",
+     "paper Figs 5-6: predictor training dynamics"),
+    ("table1_eval", "benchmarks.table1_eval",
+     "paper Table 1: predictor accuracy/F1"),
+    ("fig7_cache_hit", "benchmarks.fig7_cache_hit",
+     "paper Fig 7: cache hit rate vs capacity"),
+    ("engine_bench", "benchmarks.engine_bench",
+     "beyond-paper: integrated offload engine"),
+    ("horizon_bench", "benchmarks.horizon_bench",
+     "beyond-paper: multi-layer prediction horizon"),
+    ("kernels_bench", "benchmarks.kernels_bench",
+     "Pallas kernels vs oracles"),
+    ("roofline", "benchmarks.roofline",
+     "dry-run roofline table (reads dryrun_*.json)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore cached artifacts")
+    args = ap.parse_args()
+    picked = set(args.only.split(",")) if args.only else None
+
+    if args.fresh:
+        import shutil
+
+        from benchmarks.common import ART
+        shutil.rmtree(ART, ignore_errors=True)
+
+    all_rows = []
+    failures = []
+    for name, module, desc in SUITES:
+        if picked and name not in picked:
+            continue
+        print(f"\n=== {name}: {desc} ===")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            results = mod.run(log=print) or {}
+            dt = (time.time() - t0) * 1e6
+            for key, val in results.items():
+                all_rows.append(
+                    f"{name}.{key},{dt / max(len(results), 1):.0f},{val}")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for row in all_rows:
+        print(row)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serving demo: batch-1 autoregressive decode through the REAL offload
+engine — expert weights live in a host store, a fixed-capacity device slot
+buffer acts as the HBM expert cache, and the chosen policy prefetches.
+
+Run:  PYTHONPATH=src python examples/serve_with_cache.py \
+          --policy moe-infinity --capacity-frac 0.2
+(see also: python -m repro.launch.serve)
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main()

@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    INPUT_SHAPES,
+    EncDecConfig,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    PredictorConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+
+# arch id -> module name
+_ARCH_MODULES = {
+    "pixtral-12b": "pixtral_12b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "gemma3-27b": "gemma3_27b",
+    "yi-6b": "yi_6b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "mamba2-130m": "mamba2_130m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    # the paper's own backbone (reproduction target, not in assigned pool)
+    "deepseek-v2-lite": "deepseek_v2_lite",
+}
+
+ASSIGNED_ARCHS = tuple(a for a in _ARCH_MODULES if a != "deepseek-v2-lite")
+
+
+def _mod(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    # reduced variants exist for CPU smoke tests -> f32 for tight numerics
+    return _mod(arch).reduced().replace(dtype="float32")
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in _ARCH_MODULES}

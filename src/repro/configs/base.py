@@ -1,0 +1,213 @@
+"""Model configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the model
+builder (``repro.models.model``) consumes only this dataclass, so a config
+file fully determines an architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+# Block kinds usable in ``ModelConfig.block_pattern``:
+#   "global"   full causal attention (GQA)
+#   "local"    sliding-window causal attention (GQA), window = cfg.window
+#   "chunked"  chunked local attention (llama4 iRoPE style), chunk = cfg.chunk
+#   "mla"      multi-head latent attention (DeepSeek-V2), needs cfg.mla
+#   "rglru"    Griffin recurrent block (RG-LRU), needs cfg.rglru
+#   "ssd"      Mamba-2 SSD block, needs cfg.ssm
+ATTN_KINDS = ("global", "local", "chunked", "mla")
+RECURRENT_KINDS = ("rglru", "ssd")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int                 # routed experts
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0              # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    first_dense_layers: int = 0      # leading layers that use a dense FFN
+    d_ff_dense: int = 0              # d_ff for those dense layers (0 -> cfg.d_ff)
+    # tokens per dispatch group: the one-hot dispatch einsum costs
+    # O(S_g * cf / (3 * d_ff_expert)) relative to useful expert compute, so
+    # smaller groups cut dispatch FLOPs/bytes linearly (EXPERIMENTS.md §Perf)
+    dispatch_group: int = 4096
+    # decode-time gather path (fetch only the routed experts' weights):
+    # wins on an unsharded edge store, loses under expert-parallel sharding
+    # (EXPERIMENTS.md §Perf B1) — hence opt-in
+    decode_gather: bool = False
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 128
+    d_conv: int = 4
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0               # 0 -> d_model
+    d_conv: int = 4
+    block_width: int = 0             # unused placeholder for future
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    enc_layers: int = 24
+    enc_heads: int = 16
+    enc_d_ff: int = 8192
+    # encoder consumes frontend embeddings (audio frames), is bidirectional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    block_pattern: Tuple[str, ...] = ("global",)
+    window: int = 1024               # sliding-window size for "local"
+    chunk: int = 8192                # chunk size for "chunked"
+    ffn_kind: str = "swiglu"         # swiglu | geglu
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    frontend: Optional[str] = None   # None | "vision" | "audio" (stubbed)
+    frontend_dim: int = 1024         # dim of precomputed patch/frame embeddings
+    frontend_len: int = 256          # patches/frames per example
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    long_context_ok: bool = False    # eligible for long_500k (sub-quadratic)
+    source: str = ""                 # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def is_recurrent_kind(self, kind: str) -> bool:
+        return kind in RECURRENT_KINDS
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expand block_pattern to num_layers entries (pattern repeats)."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.hd
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        kinds = self.layer_kinds()
+        for i, k in enumerate(kinds):
+            if k in ("global", "local", "chunked"):
+                n += d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd \
+                    + self.num_heads * hd * d
+            elif k == "mla":
+                m = self.mla
+                qk = m.nope_head_dim + m.rope_head_dim
+                n += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk
+                n += d * (m.kv_lora_rank + m.rope_head_dim)
+                n += m.kv_lora_rank * self.num_heads * (m.nope_head_dim + m.v_head_dim)
+                n += self.num_heads * m.v_head_dim * d
+            elif k == "ssd":
+                s = self.ssm
+                di = s.expand * d
+                n += d * (2 * di + 2 * s.d_state + di // s.headdim) + di * d
+            elif k == "rglru":
+                w = (self.rglru.lru_width or d)
+                n += 2 * d * w + 3 * w + w * d  # in-projs + gates + out
+            # FFN
+            n += self._ffn_params(i)
+        return n
+
+    def _ffn_params(self, layer_idx: int) -> int:
+        d = self.d_model
+        if self.layer_kinds()[layer_idx] == "ssd":
+            return 0  # mamba block has no separate FFN
+        if self.moe is not None and layer_idx >= self.moe.first_dense_layers:
+            m = self.moe
+            per = 3 * d * m.d_ff_expert
+            return (m.num_experts + m.num_shared) * per + d * m.num_experts
+        dff = self.d_ff
+        if self.moe is not None and self.moe.d_ff_dense:
+            dff = self.moe.d_ff_dense
+        return 3 * d * dff
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        d = self.d_model
+        per = 3 * d * m.d_ff_expert
+        n_moe_layers = self.num_layers - m.first_dense_layers
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * per
+        return full - inactive
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    """The paper's expert-activation predictor (§3.2)."""
+    token_emb_dim: int = 2048        # backbone token-embedding dim
+    num_model_layers: int = 27       # backbone MoE layers (layer-id vocab)
+    num_experts: int = 64            # routed experts to predict
+    layer_emb_dim: int = 512
+    d_model: int = 512
+    num_layers: int = 4
+    num_heads: int = 8
+    d_ff: int = 2048
+    dropout: float = 0.1
+    max_seq: int = 512
+    top_k: int = 6                   # experts selected at eval
+    threshold: float = 0.5
+    horizon: int = 1                 # layers of look-ahead (paper: 1; >1 is ours)
+
+    def replace(self, **kw) -> "PredictorConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper.
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                        # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

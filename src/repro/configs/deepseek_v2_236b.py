@@ -1,0 +1,49 @@
+"""deepseek-v2-236b [moe] — MLA + fine-grained MoE (the paper's big sibling).
+
+[arXiv:2405.04434]: 60 layers, d_model 5120, 128 heads, MLA with
+kv_lora_rank 512 / q_lora_rank 1536 / rope_head_dim 64 / nope 128 / v 128;
+MoE: 2 shared + 160 routed experts, top-6, expert d_ff 1536; first layer
+dense (d_ff 12288); vocab 102400.
+
+This is the most paper-representative assigned architecture: the paper's
+backbone (DeepSeek-V2-Lite) is this family at reduced scale, and the expert
+cache / learned prefetch technique applies first-class.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    arch_type="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,   # MLA: kv heads == heads post up-projection
+    head_dim=128,
+    d_ff=1536,          # assigned table value == routed-expert d_ff
+    vocab_size=102400,
+    block_pattern=("mla",),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(
+        num_experts=160,
+        top_k=6,
+        num_shared=2,
+        d_ff_expert=1536,
+        first_dense_layers=1,
+        d_ff_dense=12288,
+    ),
+    rope_theta=10_000.0,
+    long_context_ok=False,  # full (latent) attention -> skip long_500k
+    source="arXiv:2405.04434",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=128, vocab_size=512,
+        mla=MLAConfig(q_lora_rank=64, kv_lora_rank=64, rope_head_dim=16,
+                      nope_head_dim=32, v_head_dim=32),
+        moe=MoEConfig(num_experts=4, top_k=2, num_shared=1, d_ff_expert=128,
+                      first_dense_layers=1, d_ff_dense=256),
+    )

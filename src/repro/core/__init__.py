@@ -1,0 +1,11 @@
+# The paper's primary contribution: learned expert-activation prediction
+# and cache-prefetch for MoE decoding (tracing -> predictor -> simulator).
+from repro.core.cache import CacheStats, ExpertCache  # noqa: F401
+from repro.core.eam import EAMC, REAMBuilder, build_ream, kmeans  # noqa: F401
+from repro.core.predictor import (  # noqa: F401
+    bce_loss, predictor_apply, predictor_init, predictor_lr_fn)
+from repro.core.simulator import (  # noqa: F401
+    SimConfig, SimResult, simulate, sweep_capacity)
+from repro.core.tracing import (  # noqa: F401
+    Trace, collect_trace, collect_traces, load_traces, moe_layer_ids,
+    save_traces)

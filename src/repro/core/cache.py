@@ -1,0 +1,96 @@
+"""GPU-VRAM-as-expert-cache model (paper §2.3): fixed expert-slot capacity,
+LRU or LFU eviction, explicit prefetch, full hit/miss accounting.
+
+Keys are (layer, expert) pairs. This object is the *simulator's* cache; the
+device-resident jittable slot-buffer lives in serving/offload.py.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Hashable, Iterable
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    prefetches: int = 0
+    prefetch_hits: int = 0     # accesses served by a prefetched entry
+    evictions: int = 0
+    demand_fetches: int = 0
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.accesses, 1)
+
+
+class ExpertCache:
+    def __init__(self, capacity: int, policy: str = "lru", on_evict=None,
+                 on_insert=None):
+        assert capacity >= 1
+        assert policy in ("lru", "lfu")
+        self.capacity = capacity
+        self.policy = policy
+        self.on_evict = on_evict      # callback(key) -> None (slot release)
+        self.on_insert = on_insert    # callback(key) -> None (slot fill)
+        self._entries: OrderedDict[Hashable, bool] = OrderedDict()
+        self._freq: dict[Hashable, int] = {}
+        self.stats = CacheStats()
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def reset(self) -> None:
+        self._entries.clear()
+        self._freq.clear()
+        self.stats = CacheStats()
+
+    def _evict_one(self) -> None:
+        if self.policy == "lru":
+            victim, _ = self._entries.popitem(last=False)
+        else:  # lfu, LRU tie-break via OrderedDict order
+            victim = min(self._entries,
+                         key=lambda k: (self._freq.get(k, 0),))
+            del self._entries[victim]
+        if self.on_evict is not None:
+            self.on_evict(victim)
+        self.stats.evictions += 1
+
+    def _insert(self, key, prefetched: bool) -> None:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            # an entry re-prefetched keeps its original provenance
+            return
+        while len(self._entries) >= self.capacity:
+            self._evict_one()
+        self._entries[key] = prefetched
+        if self.on_insert is not None:
+            self.on_insert(key)
+
+    def prefetch(self, keys: Iterable[Hashable]) -> None:
+        for key in keys:
+            if key not in self._entries:
+                self.stats.prefetches += 1
+            self._insert(key, prefetched=True)
+
+    def access(self, key) -> bool:
+        """A compute-time expert use. Miss => demand fetch (inserted)."""
+        self._freq[key] = self._freq.get(key, 0) + 1
+        if key in self._entries:
+            self.stats.hits += 1
+            if self._entries[key]:
+                self.stats.prefetch_hits += 1
+            self._entries.move_to_end(key)
+            return True
+        self.stats.misses += 1
+        self.stats.demand_fetches += 1
+        self._insert(key, prefetched=False)
+        return False

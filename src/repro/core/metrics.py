@@ -1,0 +1,62 @@
+"""Evaluation metrics (paper §3.2.4): position-wise accuracy (both readings)
+and macro F1 over experts."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def select_experts(logits: np.ndarray, top_k: int, threshold: float = 0.5):
+    """Paper's rule: top-k by sigmoid prob, kept only if prob > threshold.
+    logits: (..., E) -> bool (..., E)."""
+    probs = 1.0 / (1.0 + np.exp(-logits.astype(np.float64)))
+    e = probs.shape[-1]
+    k = min(top_k, e)
+    kth = np.partition(probs, e - k, axis=-1)[..., e - k: e - k + 1]
+    in_topk = probs >= kth
+    return in_topk & (probs > threshold)
+
+
+def elementwise_accuracy(pred: np.ndarray, true: np.ndarray,
+                         mask: np.ndarray | None = None) -> float:
+    """Per-(position, expert) binary accuracy — the reading under which the
+    paper's 97.5% (with 6:58 imbalance) is reproducible."""
+    eq = (pred.astype(bool) == true.astype(bool))
+    if mask is not None:
+        return float(eq[mask.astype(bool)].mean())
+    return float(eq.mean())
+
+
+def exact_set_accuracy(pred: np.ndarray, true: np.ndarray,
+                       mask: np.ndarray | None = None) -> float:
+    """Fraction of positions whose predicted expert set matches exactly."""
+    match = np.all(pred.astype(bool) == true.astype(bool), axis=-1)
+    if mask is not None:
+        return float(match[mask.astype(bool)].mean())
+    return float(match.mean())
+
+
+def macro_f1(pred: np.ndarray, true: np.ndarray,
+             mask: np.ndarray | None = None) -> float:
+    """Mean per-expert F1 (expert = one binary classification problem)."""
+    p = pred.reshape(-1, pred.shape[-1]).astype(bool)
+    t = true.reshape(-1, true.shape[-1]).astype(bool)
+    if mask is not None:
+        keep = mask.reshape(-1).astype(bool)
+        p, t = p[keep], t[keep]
+    tp = np.sum(p & t, axis=0).astype(np.float64)
+    fp = np.sum(p & ~t, axis=0).astype(np.float64)
+    fn = np.sum(~p & t, axis=0).astype(np.float64)
+    f1 = 2 * tp / np.maximum(2 * tp + fp + fn, 1e-9)
+    # experts never active AND never predicted contribute f1=0 in strict
+    # macro; follow sklearn's zero_division=0 convention
+    return float(f1.mean())
+
+
+def prediction_hit_rate(pred_sets, true_sets) -> float:
+    """Fraction of ground-truth activations present in the predicted set."""
+    hits = total = 0
+    for p, t in zip(pred_sets, true_sets):
+        ps = set(p)
+        hits += sum(1 for e in t if e in ps)
+        total += len(t)
+    return hits / max(total, 1)

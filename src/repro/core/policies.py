@@ -1,0 +1,251 @@
+"""Prefetch policies evaluated by the cache simulator (paper §3.1/§4.1.3).
+
+Interface: before layer ``l`` of token ``t`` runs, ``predict(t, l)`` names
+experts to prefetch; after the layer runs, ``observe(...)`` reveals ground
+truth. Policies:
+
+  NoPrefetchPolicy   — reactive LRU/LFU caching only (on-demand fetch)
+  NextLayerAllPolicy — DeepSpeed-MoE: eagerly fetch *every* expert [2]
+  GlobalFrequencyPolicy — BrainStorm-style workload-popularity counts [4]
+  RandomPolicy       — floor baseline
+  MoEInfinityPolicy  — rEAM cosine match against a k-means EAMC [1]
+  MoEBeyondPolicy    — the paper: learned transformer predictor
+  OraclePolicy       — ground truth (upper bound)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.eam import EAMC, REAMBuilder, build_ream
+
+
+class Policy:
+    name = "base"
+
+    def begin_prompt(self, trace) -> None:  # noqa: ARG002
+        pass
+
+    def observe(self, t: int, layer: int, experts: Sequence[int],
+                embedding: Optional[np.ndarray] = None) -> None:
+        pass
+
+    def predict(self, t: int, layer: int) -> np.ndarray:
+        """Experts to prefetch for (token t, layer)."""
+        return np.empty((0,), np.int64)
+
+
+class NoPrefetchPolicy(Policy):
+    name = "lru-on-demand"
+
+
+class RandomPolicy(Policy):
+    name = "random"
+
+    def __init__(self, num_experts: int, width: int, seed: int = 0):
+        self.e = num_experts
+        self.width = width
+        self.rng = np.random.default_rng(seed)
+
+    def predict(self, t, layer):
+        return self.rng.choice(self.e, size=min(self.width, self.e),
+                               replace=False)
+
+
+class NextLayerAllPolicy(Policy):
+    """DeepSpeed-MoE-style: prefetch the whole next layer (over-fetches)."""
+    name = "next-layer-all"
+
+    def __init__(self, num_experts: int):
+        self.e = num_experts
+
+    def predict(self, t, layer):
+        return np.arange(self.e)
+
+
+class GlobalFrequencyPolicy(Policy):
+    """BrainStorm-style: retain historically popular experts per layer."""
+    name = "global-frequency"
+
+    def __init__(self, train_traces, num_layers: int, num_experts: int,
+                 width: int):
+        counts = np.zeros((num_layers, num_experts), np.float64)
+        for tr in train_traces:
+            counts += build_ream(tr, num_layers, num_experts)
+        self.top = np.argsort(-counts, axis=1)[:, :width]
+
+    def predict(self, t, layer):
+        return self.top[layer]
+
+
+class OraclePolicy(Policy):
+    name = "oracle"
+
+    def begin_prompt(self, trace):
+        self.trace = trace
+
+    def predict(self, t, layer):
+        return np.unique(self.trace.experts[t, layer])
+
+
+class MoEInfinityPolicy(Policy):
+    """Paper §4.1.4: partial rEAM -> cosine match vs EAMC -> prefetch the
+    matched sketch's expert group for the upcoming layer."""
+    name = "moe-infinity"
+
+    def __init__(self, train_traces, num_layers: int, num_experts: int,
+                 width: int, eamc_capacity: int = 32, seed: int = 0):
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.width = width
+        self.eamc = EAMC(num_layers, num_experts, eamc_capacity)
+        reams = [build_ream(tr, num_layers, num_experts)
+                 for tr in train_traces]
+        if reams:
+            self.eamc.fit(reams, seed=seed)
+        self.partial: REAMBuilder | None = None
+
+    def begin_prompt(self, trace):  # noqa: ARG002
+        self.partial = REAMBuilder(self.num_layers, self.num_experts)
+
+    def observe(self, t, layer, experts, embedding=None):
+        self.partial.add(layer, experts)
+
+    def predict(self, t, layer):
+        return self.eamc.predict_layer(self.partial.counts, layer,
+                                       self.width)
+
+
+class MoEBeyondPolicy(Policy):
+    """The paper's learned predictor.
+
+    For simulation speed the per-layer predictions for a whole trace are
+    precomputed in one batched, causally-masked call — position t sees only
+    tokens <= t, so this is exactly the online one-layer-look-ahead."""
+    name = "moe-beyond"
+
+    def __init__(self, predictor_params, pcfg, width: Optional[int] = None):
+        import jax
+
+        from repro.core.predictor import predictor_apply
+        self.params = predictor_params
+        self.pcfg = pcfg
+        self.width = width or pcfg.top_k
+        self._apply = jax.jit(
+            lambda pr, e, l, m: predictor_apply(pr, pcfg, e, l, m))
+        self._pred: Dict[int, np.ndarray] = {}
+
+    def begin_prompt(self, trace):
+        import jax.numpy as jnp
+
+        from repro.core.metrics import select_experts
+        pc = self.pcfg
+        t = min(trace.num_tokens, pc.max_seq)
+        emb = jnp.asarray(trace.embeddings[None, :t])
+        mask = jnp.ones((1, t), bool)
+        n_layers = trace.experts.shape[1]
+        self._pred = {}
+        for layer in range(n_layers):
+            lids = jnp.full((1, t), layer, jnp.int32)
+            logits = np.asarray(self._apply(self.params, emb, lids, mask))[0]
+            logits = logits[:, : pc.num_experts]          # horizon slot 0
+            # prefetch uses pure top-k (threshold only matters for the
+            # paper's accuracy metric; an empty prefetch set helps nobody)
+            sel = select_experts(logits, self.width, threshold=-1e9)
+            self._pred[layer] = [np.nonzero(s)[0] for s in sel]
+        self._t_max = t
+
+    def predict(self, t, layer):
+        if t >= self._t_max or layer not in self._pred:
+            return np.empty((0,), np.int64)
+        return self._pred[layer][t]
+
+
+class CrossLayerPolicy(Policy):
+    """Beyond-paper (DESIGN.md §3): exploit the cross-layer gate correlation
+    MoE-Infinity ignores — predict layer l's experts from the experts that
+    JUST fired at layer l-1 for the same token, via conditional frequencies
+    P(e_l | e_{l-1}) estimated from training traces. Zero learned weights;
+    complements (and composes with) the request-level rEAM signal."""
+    name = "cross-layer"
+
+    def __init__(self, train_traces, num_layers: int, num_experts: int,
+                 width: int, alpha: float = 0.5):
+        self.width = width
+        self.e = num_experts
+        # cond[l][a, b] = count(expert b fires at layer l | a fired at l-1)
+        self.cond = np.full((num_layers, num_experts, num_experts), alpha)
+        self.prior = np.full((num_layers, num_experts), alpha)
+        for tr in train_traces:
+            t_steps, n_layers, _ = tr.experts.shape
+            for t in range(t_steps):
+                for layer in range(n_layers):
+                    cur = np.unique(tr.experts[t, layer])
+                    self.prior[layer, cur] += 1
+                    if layer > 0:
+                        prev = np.unique(tr.experts[t, layer - 1])
+                        for a in prev:
+                            self.cond[layer, a, cur] += 1
+        self._last: Dict[int, np.ndarray] = {}
+
+    def begin_prompt(self, trace=None):  # noqa: ARG002
+        self._last = {}
+
+    def observe(self, t, layer, experts, embedding=None):
+        self._last[layer] = np.asarray(experts)
+
+    def predict(self, t, layer):
+        if layer == 0 or (layer - 1) not in self._last:
+            scores = self.prior[layer]
+        else:
+            prev = self._last[layer - 1]
+            scores = self.cond[layer, prev].sum(axis=0)
+        return np.argsort(-scores)[: self.width]
+
+
+class OnlineMoEBeyondPolicy(Policy):
+    """Live-serving variant of MoEBeyondPolicy: accumulates the prompt's
+    token embeddings as they are observed and predicts incrementally —
+    used by serving/engine.py where no trace exists up front."""
+    name = "moe-beyond-online"
+
+    def __init__(self, predictor_params, pcfg, width: Optional[int] = None):
+        import jax
+
+        from repro.core.predictor import predictor_apply
+        self.params = predictor_params
+        self.pcfg = pcfg
+        self.width = width or pcfg.top_k
+        self._apply = jax.jit(
+            lambda pr, e, l, m: predictor_apply(pr, pcfg, e, l, m))
+        self._emb: list = []
+        self._seen_t = -1
+
+    def begin_prompt(self, trace=None):  # noqa: ARG002
+        self._emb = []
+        self._seen_t = -1
+
+    def observe(self, t, layer, experts, embedding=None):
+        if embedding is not None and t > self._seen_t:
+            self._emb.append(np.asarray(embedding, np.float32))
+            self._seen_t = t
+
+    def predict(self, t, layer):
+        import jax.numpy as jnp
+
+        from repro.core.metrics import select_experts
+        pc = self.pcfg
+        # embeddings observed so far (token t itself is appended by the
+        # engine before deeper layers run; fall back to t-1 context)
+        n = min(len(self._emb), pc.max_seq)
+        if n == 0:
+            return np.empty((0,), np.int64)
+        emb = np.zeros((1, n, pc.token_emb_dim), np.float32)
+        emb[0] = np.stack(self._emb[-n:])
+        logits = np.asarray(self._apply(
+            self.params, jnp.asarray(emb),
+            jnp.full((1, n), layer, jnp.int32),
+            jnp.ones((1, n), bool)))[0, -1, : pc.num_experts]
+        sel = select_experts(logits, self.width, threshold=-1e9)
+        return np.nonzero(sel)[0]

@@ -1,0 +1,144 @@
+"""The MoE-Beyond expert-activation predictor (paper §3.2), in JAX.
+
+Architecture (hyper-parameter-faithful):
+  concat(token_emb, layer_emb[layer_id]) -> linear(512) -> 4-layer post-LN
+  transformer encoder (8 heads, d_ff 2048, dropout .1) -> 2-layer GELU MLP
+  head -> num_experts sigmoid logits (multi-label).
+
+One divergence, documented in DESIGN.md §10: the self-attention mask is
+causal *and* padding — the paper only masks padding, but causality is what
+makes the online one-layer-look-ahead prefetch legal (position t must not
+peek at future tokens), and it lets the simulator batch a whole prompt in
+one call while remaining equivalent to online prediction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PredictorConfig
+
+NEG_INF = -1e30
+
+
+def _ln(x, g, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * g + b).astype(x.dtype)
+
+
+def predictor_init(key, pc: PredictorConfig):
+    d, ff, e = pc.d_model, pc.d_ff, pc.num_experts
+    keys = jax.random.split(key, 3 + pc.num_layers)
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * (i ** -0.5)
+
+    enc = []
+    for i in range(pc.num_layers):
+        ks = jax.random.split(keys[3 + i], 6)
+        enc.append({
+            "wq": dense(ks[0], d, d), "wk": dense(ks[1], d, d),
+            "wv": dense(ks[2], d, d), "wo": dense(ks[3], d, d),
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "w1": dense(ks[4], d, ff), "b1": jnp.zeros((ff,)),
+            "w2": dense(ks[5], ff, d), "b2": jnp.zeros((d,)),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        })
+    enc = (jax.tree.map(lambda *xs: jnp.stack(xs), *enc) if enc
+           else {})
+
+    k_h1, k_h2 = jax.random.split(keys[2])
+    return {
+        "layer_emb": jax.random.normal(
+            keys[0], (pc.num_model_layers, pc.layer_emb_dim)) * 0.02,
+        "in_w": dense(keys[1], pc.token_emb_dim + pc.layer_emb_dim, d),
+        "in_b": jnp.zeros((d,)),
+        "enc": enc,
+        "head_w0": dense(k_h1, d, d), "head_b0": jnp.zeros((d,)),
+        "head_w1": dense(k_h2, d, e * pc.horizon),
+        "head_b1": jnp.zeros((e * pc.horizon,)),
+    }
+
+
+def _dropout(x, rate, rng, train):
+    if not train or rate <= 0.0 or rng is None:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def predictor_apply(params, pc: PredictorConfig, emb, layer_ids, pad_mask,
+                    train: bool = False, rng=None):
+    """emb: (B,T,token_emb_dim) f32; layer_ids: (B,T) i32;
+    pad_mask: (B,T) bool (True = real token). Returns logits (B,T,E*horizon).
+    """
+    b, t, _ = emb.shape
+    h = pc.num_heads
+    dh = pc.d_model // h
+
+    # standardise the backbone embeddings: a trained tok_emb can have tiny
+    # scale (~0.02 init), which starves the input projection's gradients
+    ef = emb.astype(jnp.float32)
+    mu = jnp.mean(ef, -1, keepdims=True)
+    sd = jnp.std(ef, -1, keepdims=True) + 1e-6
+    ef = (ef - mu) / sd
+
+    le = jnp.take(params["layer_emb"], layer_ids, axis=0)
+    x = jnp.concatenate([ef, le], -1)
+    x = jnp.einsum("btf,fd->btd", x, params["in_w"]) + params["in_b"]
+
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    mask = causal[None] & pad_mask[:, None, :]           # (B,T,T)
+
+    n_drop = pc.num_layers * 2 + 1
+    rngs = (jax.random.split(rng, n_drop) if (train and rng is not None)
+            else [None] * n_drop)
+
+    for i in range(pc.num_layers):
+        lp = jax.tree.map(lambda a: a[i], params["enc"])
+        # pre-LN (norm_first): post-LN stalls for many epochs at this data
+        # scale without warmup (Xiong et al. 2020) — verified empirically in
+        # EXPERIMENTS.md §Paper-validation notes
+        xn = _ln(x, lp["ln1_g"], lp["ln1_b"])
+        q = jnp.einsum("btd,de->bte", xn, lp["wq"]).reshape(b, t, h, dh)
+        k = jnp.einsum("btd,de->bte", xn, lp["wk"]).reshape(b, t, h, dh)
+        v = jnp.einsum("btd,de->bte", xn, lp["wv"]).reshape(b, t, h, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh ** -0.5
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, -1)
+        p = _dropout(p, pc.dropout, rngs[2 * i], train)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, t, -1)
+        o = jnp.einsum("bte,ed->btd", o, lp["wo"])
+        x = x + o
+        xn = _ln(x, lp["ln2_g"], lp["ln2_b"])
+        f = jax.nn.gelu(jnp.einsum("btd,df->btf", xn, lp["w1"]) + lp["b1"])
+        f = jnp.einsum("btf,fd->btd", f, lp["w2"]) + lp["b2"]
+        f = _dropout(f, pc.dropout, rngs[2 * i + 1], train)
+        x = x + f
+
+    x = jax.nn.gelu(jnp.einsum("btd,de->bte", x, params["head_w0"])
+                    + params["head_b0"])
+    x = _dropout(x, pc.dropout, rngs[-1], train)
+    return jnp.einsum("btd,de->bte", x, params["head_w1"]) + params["head_b1"]
+
+
+def bce_loss(logits, targets, mask):
+    """Multi-label BCE-with-logits. targets: (B,T,E) in {0,1}; mask (B,T)."""
+    z = logits.astype(jnp.float32)
+    y = targets.astype(jnp.float32)
+    per = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    per = jnp.mean(per, -1)                              # over experts
+    return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def predictor_lr_fn(base: float = 1e-4):
+    """The paper's layerwise LR groups (§3.2.3)."""
+    def fn(path: str) -> float:
+        if path.startswith("in_") or path.startswith("layer_emb"):
+            return base                   # input projection: 1e-4
+        if path.startswith("head_"):
+            return 0.8 * base             # head: 0.8e-4
+        return 0.9 * base                 # encoder: 0.9e-4
+    return fn

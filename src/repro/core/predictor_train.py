@@ -1,0 +1,126 @@
+"""Predictor training (paper §3.2.3/§3.2.5): AdamW(β2=.98) with layerwise
+LRs, grad-clip 1.0, batch 4, ≤10 epochs, early stopping patience 3, best
+model by validation loss. bf16/AMP adaptation per DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PredictorConfig
+from repro.core import metrics as M
+from repro.core.predictor import (bce_loss, predictor_apply, predictor_init,
+                                  predictor_lr_fn)
+from repro.data.traces import PredictorDataset
+from repro.training.optimizer import make_adamw
+
+
+@dataclass
+class TrainHistory:
+    train_loss: List[float] = field(default_factory=list)
+    train_acc: List[float] = field(default_factory=list)
+    train_f1: List[float] = field(default_factory=list)
+    val_loss: List[float] = field(default_factory=list)
+    val_acc: List[float] = field(default_factory=list)
+    val_exact: List[float] = field(default_factory=list)
+    val_f1: List[float] = field(default_factory=list)
+    steps: int = 0
+
+
+def evaluate(params, pcfg: PredictorConfig, ds: PredictorDataset,
+             batch_size: int = 8, max_batches: Optional[int] = None
+             ) -> Dict[str, float]:
+    apply = jax.jit(lambda pr, e, l, m: predictor_apply(pr, pcfg, e, l, m))
+    losses, preds, trues, masks = [], [], [], []
+    for bi, (emb, lids, mask, tgt) in enumerate(
+            ds.batches(batch_size, shuffle=False)):
+        if max_batches and bi >= max_batches:
+            break
+        logits = apply(params, jnp.asarray(emb), jnp.asarray(lids),
+                       jnp.asarray(mask))
+        losses.append(float(bce_loss(logits, jnp.asarray(tgt),
+                                     jnp.asarray(mask))))
+        lg = np.asarray(logits)[..., : pcfg.num_experts]
+        tg = tgt[..., : pcfg.num_experts]
+        preds.append(M.select_experts(lg, pcfg.top_k, pcfg.threshold))
+        trues.append(tg > 0.5)
+        masks.append(mask)
+    pred = np.concatenate(preds)
+    true = np.concatenate(trues)
+    mask = np.concatenate(masks)
+    return {
+        "loss": float(np.mean(losses)),
+        "acc": M.elementwise_accuracy(pred, true, mask),
+        "exact": M.exact_set_accuracy(pred, true, mask),
+        "f1": M.macro_f1(pred, true, mask),
+    }
+
+
+def train_predictor(train_traces, val_traces, pcfg: PredictorConfig,
+                    epochs: int = 10, batch_size: int = 4,
+                    base_lr: float = 1e-4, patience: int = 3,
+                    seed: int = 0, log=print, eval_batches: int = 50):
+    ds_train = PredictorDataset(train_traces, pcfg)
+    ds_val = PredictorDataset(val_traces, pcfg)
+    key = jax.random.PRNGKey(seed)
+    k_init, k_drop = jax.random.split(key)
+    params = predictor_init(k_init, pcfg)
+    opt_init, opt_update = make_adamw(
+        lr=predictor_lr_fn(base_lr), b1=0.9, b2=0.98, weight_decay=0.01,
+        clip=1.0)
+    opt_state = opt_init(params)
+
+    @jax.jit
+    def train_step(params, opt_state, emb, lids, mask, tgt, rng):
+        def loss_fn(p):
+            logits = predictor_apply(p, pcfg, emb, lids, mask, train=True,
+                                     rng=rng)
+            return bce_loss(logits, tgt, mask)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, stats = opt_update(grads, opt_state, params)
+        return params, opt_state, loss, stats["grad_norm"]
+
+    hist = TrainHistory()
+    best_val = np.inf
+    best_params = params
+    bad_epochs = 0
+
+    for epoch in range(epochs):
+        t0 = time.time()
+        ep_losses = []
+        for emb, lids, mask, tgt in ds_train.batches(batch_size,
+                                                     seed=seed + epoch):
+            k_drop, sub = jax.random.split(k_drop)
+            params, opt_state, loss, gnorm = train_step(
+                params, opt_state, jnp.asarray(emb), jnp.asarray(lids),
+                jnp.asarray(mask), jnp.asarray(tgt), sub)
+            ep_losses.append(float(loss))
+            hist.steps += 1
+        tr = evaluate(params, pcfg, ds_train, max_batches=eval_batches)
+        va = evaluate(params, pcfg, ds_val, max_batches=eval_batches)
+        hist.train_loss.append(float(np.mean(ep_losses)))
+        hist.train_acc.append(tr["acc"])
+        hist.train_f1.append(tr["f1"])
+        hist.val_loss.append(va["loss"])
+        hist.val_acc.append(va["acc"])
+        hist.val_exact.append(va["exact"])
+        hist.val_f1.append(va["f1"])
+        log(f"epoch {epoch}: train_loss={np.mean(ep_losses):.4f} "
+            f"val_loss={va['loss']:.4f} val_acc={va['acc']:.4f} "
+            f"val_f1={va['f1']:.4f} ({time.time() - t0:.1f}s, "
+            f"seq-cache hr={ds_train.cache.hits}/{ds_train.cache.hits + ds_train.cache.misses})")
+        if va["loss"] < best_val - 1e-5:
+            best_val = va["loss"]
+            best_params = jax.tree.map(lambda x: x, params)
+            bad_epochs = 0
+        else:
+            bad_epochs += 1
+            if bad_epochs >= patience:          # early stopping (paper)
+                log(f"early stop at epoch {epoch}")
+                break
+    return best_params, hist

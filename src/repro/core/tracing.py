@@ -1,0 +1,142 @@
+"""Expert-activation trace collection (paper Contribution 2).
+
+Runs batch-1 autoregressive decoding on an MoE backbone and records, per
+generated token: token id, the backbone's token-embedding vector, and the
+routed expert ids at every MoE layer — the paper's trace schema.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import _layer_is_moe, _layer_split
+
+
+@dataclass
+class Trace:
+    tokens: np.ndarray       # (T,) i32 — token processed at each step
+    embeddings: np.ndarray   # (T, emb_dim) f32 — backbone token embeddings
+    experts: np.ndarray      # (T, L_moe, k) i32 — routed experts per layer
+    prompt_len: int          # tokens 0..prompt_len-1 came from the prompt
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.tokens)
+
+
+def moe_layer_ids(cfg) -> List[int]:
+    return [i for i in range(cfg.num_layers) if _layer_is_moe(cfg, i)]
+
+
+def extract_step_experts(cfg, extras) -> np.ndarray:
+    """Flatten a decode step's extras into (L_moe, k) in layer order
+    (batch element 0 — the paper operates at batch size 1)."""
+    n_head, n_groups, _ = _layer_split(cfg)
+    pat = len(cfg.block_pattern)
+    rows = []
+    for ex in extras["head"]:
+        if "experts" in ex:
+            rows.append(np.asarray(ex["experts"])[0, 0])
+    for g in range(n_groups):
+        for j in range(pat):
+            ex = extras["scan"][j]
+            if isinstance(ex, dict) and "experts" in ex:
+                rows.append(np.asarray(ex["experts"])[g, 0, 0])
+    for ex in extras["tail"]:
+        if "experts" in ex:
+            rows.append(np.asarray(ex["experts"])[0, 0])
+    return np.stack(rows) if rows else np.zeros((0, 0), np.int32)
+
+
+_STEP_FNS: dict = {}
+
+
+def _traced_step(cfg):
+    """One jitted decode step per config (avoids per-trace recompiles)."""
+    if cfg not in _STEP_FNS:
+        from repro.models import transformer as T
+
+        @jax.jit
+        def step_fn(prm, caches, pos, tok):
+            logits, caches2, extras, _ = T.lm_apply(
+                prm, cfg, tok, None, mode="decode", caches=caches, pos=pos)
+            return logits, caches2, extras
+
+        _STEP_FNS[cfg] = step_fn
+    return _STEP_FNS[cfg]
+
+
+def collect_trace(model, params, prompt: Sequence[int], max_new: int,
+                  cache_len: int, temperature: float = 0.8,
+                  seed: int = 0) -> Trace:
+    """Token-by-token batch-1 decode; every token (prompt + generated) passes
+    through decode_step so its expert activations are recorded."""
+    cfg = model.cfg
+    tok_emb = np.asarray(params["tok_emb"], np.float32)
+    state = model.init_decode_state(1, cache_len)
+    rng = jax.random.PRNGKey(seed)
+    step_fn = _traced_step(cfg)
+
+    tokens: List[int] = []
+    experts_rows = []
+    cur = int(prompt[0])
+    n_total = min(len(prompt) + max_new, cache_len)
+    for t in range(n_total):
+        tok = jnp.full((1, 1), cur, jnp.int32)
+        logits, caches, extras = step_fn(params, state["caches"],
+                                         state["pos"], tok)
+        state = {"pos": state["pos"] + 1, "caches": caches}
+        tokens.append(cur)
+        experts_rows.append(extract_step_experts(cfg, extras))
+        if t + 1 < len(prompt):
+            cur = int(prompt[t + 1])
+        else:
+            rng, sub = jax.random.split(rng)
+            lg = logits[0, -1] / max(temperature, 1e-6)
+            cur = int(jax.random.categorical(sub, lg))
+
+    toks = np.asarray(tokens, np.int32)
+    return Trace(
+        tokens=toks,
+        embeddings=tok_emb[toks],
+        experts=np.stack(experts_rows).astype(np.int32),
+        prompt_len=min(len(prompt), n_total),
+    )
+
+
+def collect_traces(model, params, prompts, max_new: int, cache_len: int,
+                   temperature: float = 0.8, seed: int = 0) -> List[Trace]:
+    return [collect_trace(model, params, p, max_new, cache_len, temperature,
+                          seed + i) for i, p in enumerate(prompts)]
+
+
+# ---------------------------------------------------------------------------
+# (De)serialisation
+
+def save_traces(path: str, traces: List[Trace]) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    blob = {}
+    for i, tr in enumerate(traces):
+        blob[f"t{i}_tokens"] = tr.tokens
+        blob[f"t{i}_emb"] = tr.embeddings.astype(np.float16)
+        blob[f"t{i}_experts"] = tr.experts
+        blob[f"t{i}_plen"] = np.asarray(tr.prompt_len)
+    np.savez_compressed(path, n=np.asarray(len(traces)), **blob)
+
+
+def load_traces(path: str) -> List[Trace]:
+    data = np.load(path)
+    out = []
+    for i in range(int(data["n"])):
+        out.append(Trace(
+            tokens=data[f"t{i}_tokens"],
+            embeddings=data[f"t{i}_emb"].astype(np.float32),
+            experts=data[f"t{i}_experts"],
+            prompt_len=int(data[f"t{i}_plen"]),
+        ))
+    return out

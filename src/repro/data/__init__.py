@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    TopicCorpus, lm_batches, make_topic_corpus, sample_prompts)
+from repro.data.traces import PredictorDataset, SequenceCache  # noqa: F401

@@ -1,0 +1,88 @@
+"""Flash-decode kernel: one query token against a long KV cache with online
+softmax over KV blocks (the long_500k serving hot spot).
+
+Grid: (KVH kv-heads, S/BS kv blocks). Running (max, sum, acc) live in VMEM
+scratch; each step rescales the accumulator — the (S,) score row is never
+materialised in HBM. Positions >= valid_len are masked (decode against a
+partially-filled cache).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, scale: float):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (G, hd)
+    k = k_ref[...][:, 0].astype(jnp.float32)             # (BS, hd)
+    v = v_ref[...][:, 0].astype(jnp.float32)             # (BS, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G,BS)
+    kpos = sb * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < vlen_ref[0], s, NEG)
+
+    m_prev = m_ref[...]                                  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)                               # (G, BS)
+    alpha = jnp.exp(m_prev - m_new)                      # (G, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sb == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q, k, v, valid_len, block_s: int = 512,
+                 interpret: bool = True):
+    """q: (H, hd); k/v: (S, KVH, hd); valid_len: i32 -> (H, hd)."""
+    s, kvh, hd = k.shape
+    h = q.shape[0]
+    g = h // kvh
+    bs = min(block_s, s)
+    pad_s = (-s) % bs
+    if pad_s:
+        k = jnp.pad(k, ((0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad_s), (0, 0), (0, 0)))
+    sp = k.shape[0]
+    qg = q.reshape(kvh, g, hd)
+    vlen = jnp.full((1,), valid_len, jnp.int32)
+
+    out = pl.pallas_call(
+        partial(_kernel, block_s=bs, scale=hd ** -0.5),
+        grid=(kvh, sp // bs),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # valid_len scalar
+            pl.BlockSpec((1, g, hd), lambda n, sb: (n, 0, 0)),
+            pl.BlockSpec((bs, 1, hd), lambda n, sb: (sb, n, 0)),
+            pl.BlockSpec((bs, 1, hd), lambda n, sb: (sb, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda n, sb: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),             # running max
+            pltpu.VMEM((g, 1), jnp.float32),             # running sum
+            pltpu.VMEM((g, hd), jnp.float32),            # output accumulator
+        ],
+        interpret=interpret,
+    )(vlen, qg, k, v)
+    return out.reshape(h, hd)

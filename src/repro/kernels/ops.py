@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels with backend selection.
+
+backend:
+  "jnp"     — the pure-jnp oracle (used on CPU / for the dry-run lowering)
+  "pallas"  — Pallas in interpret mode (CPU-validated kernel body)
+  "tpu"     — Pallas compiled for TPU (the deployment target)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.expert_ffn import expert_ffn as _expert_ffn_pallas
+from repro.kernels.flash_attention import flash_decode as _flash_pallas
+from repro.kernels.topk_gating import topk_gating as _topk_pallas
+
+
+def topk_gating(logits: jnp.ndarray, k: int, backend: str = "jnp"):
+    if backend == "jnp":
+        return ref.topk_gating_ref(logits, k)
+    return _topk_pallas(logits, k, interpret=(backend != "tpu"))
+
+
+def expert_ffn(x, weights, wg, wu, wd, backend: str = "jnp"):
+    if backend == "jnp":
+        return ref.expert_ffn_ref(x, weights, wg, wu, wd)
+    return _expert_ffn_pallas(x, weights, wg, wu, wd,
+                              interpret=(backend != "tpu"))
+
+
+def flash_decode(q, k, v, valid_len, backend: str = "jnp"):
+    if backend == "jnp":
+        return ref.flash_decode_ref(q, k, v, valid_len)
+    return _flash_pallas(q, k, v, valid_len, interpret=(backend != "tpu"))
+
+
+def ssd_chunk(c, b, xdt, a_cum, backend: str = "jnp"):
+    from repro.kernels.ssd_chunk import ssd_chunk as _p, ssd_chunk_ref as _r
+    if backend == "jnp":
+        return _r(c, b, xdt, a_cum)
+    return _p(c, b, xdt, a_cum, interpret=(backend != "tpu"))

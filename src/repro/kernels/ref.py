@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_gating_ref(logits: jnp.ndarray, k: int):
+    """logits: (T, E) -> (weights (T,k) f32, idx (T,k) i32).
+
+    Softmax over all experts, take top-k, renormalise (DeepSeek-V2 router).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+    return w, idx.astype(jnp.int32)
+
+
+def expert_ffn_ref(x: jnp.ndarray, weights: jnp.ndarray, wg: jnp.ndarray,
+                   wu: jnp.ndarray, wd: jnp.ndarray):
+    """Batch-1 cached-expert SwiGLU FFN.
+
+    x: (D,); weights: (k,); wg/wu: (k, D, F); wd: (k, F, D) -> (D,).
+    y = sum_k weights[k] * (silu(x @ wg_k) * (x @ wu_k)) @ wd_k
+    """
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("d,kdf->kf", xf, wg.astype(jnp.float32))
+    u = jnp.einsum("d,kdf->kf", xf, wu.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("kf,kfd->kd", h, wd.astype(jnp.float32))
+    return jnp.einsum("k,kd->d", weights.astype(jnp.float32), y).astype(x.dtype)
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid_len: jnp.ndarray | int):
+    """Single-token decode attention against a KV cache.
+
+    q: (H, hd); k/v: (S, KVH, hd); positions >= valid_len are masked.
+    GQA: H = KVH * G. Returns (H, hd).
+    """
+    s, kvh, hd = k.shape
+    h = q.shape[0]
+    g = h // kvh
+    qg = q.reshape(kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("ngd,snd->ngs", qg, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    mask = jnp.arange(s) < valid_len
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("ngs,snd->ngd", probs, v.astype(jnp.float32))
+    return out.reshape(h, hd).astype(q.dtype)

@@ -1,0 +1,77 @@
+"""Mamba-2 SSD within-chunk kernel: the quadratic (L x L) masked-decay
+attention-like term, computed per (sequence-chunk, head) tile in VMEM.
+
+y[l] = C[l] . sum_{s<=l} exp(a_cum[l] - a_cum[s]) * dt[s] * (B[s] x[s])
+
+Grid: (B*Nc, H). Per step the (L, N) B/C tiles and the (L, P) x tile live in
+VMEM; the (L, L) decay mask never leaves it. L=chunk (128) and P/N are
+128-multiples at full scale, MXU-aligned.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(c_ref, b_ref, x_ref, acum_ref, o_ref):
+    c = c_ref[0].astype(jnp.float32)          # (L, N)
+    b = b_ref[0].astype(jnp.float32)          # (L, N)
+    x = x_ref[0, 0].astype(jnp.float32)       # (L, P)  (already * dt)
+    ac = acum_ref[0, 0].astype(jnp.float32)   # (L,)
+
+    l = c.shape[0]
+    seg = ac[:, None] - ac[None, :]           # a_cum[l] - a_cum[s]
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    mask = iota_s <= iota_l
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)  # (L, L), lower-tri
+
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (L, L)
+    m = scores * decay
+    o_ref[0, 0] = jnp.dot(m, x, preferred_element_type=jnp.float32) \
+        .astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(c, b, xdt, a_cum, interpret: bool = True):
+    """c, b: (G, L, N); xdt: (G, H, L, P); a_cum: (G, H, L) -> (G, H, L, P).
+
+    G = batch*num_chunks flattened; B/C shared across heads (1 group).
+    """
+    g, l, n = c.shape
+    _, h, _, p = xdt.shape
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(g, h),
+        in_specs=[
+            pl.BlockSpec((1, l, n), lambda i, j: (i, 0, 0)),     # C
+            pl.BlockSpec((1, l, n), lambda i, j: (i, 0, 0)),     # B
+            pl.BlockSpec((1, 1, l, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, l), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, l, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, h, l, p), xdt.dtype),
+        interpret=interpret,
+    )(c, b, xdt, a_cum)
+    return out
+
+
+def ssd_chunk_ref(c, b, xdt, a_cum):
+    """Pure-jnp oracle (mirrors models/ssd.py's y_diag einsum)."""
+    cf = c.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    xf = xdt.astype(jnp.float32)
+    ac = a_cum.astype(jnp.float32)
+    l = cf.shape[1]
+    seg = ac[..., :, None] - ac[..., None, :]            # (G,H,L,L)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("gln,gsn->gls", cf, bf)          # (G,L,L)
+    m = scores[:, None] * decay                          # (G,H,L,L)
+    return jnp.einsum("ghls,ghsp->ghlp", m, xf).astype(xdt.dtype)

@@ -1,0 +1,72 @@
+"""Fused MoE router kernel: softmax over experts + iterative top-k select +
+renormalise, one VMEM pass per token block.
+
+TPU adaptation: the hot loop of every MoE layer is the router — on GPU this
+is a cuBLAS matmul + thrust sort; on TPU we fuse the softmax and the k
+argmax passes so the (T, E) logits tile never leaves VMEM. Token blocks are
+MXU/VPU-aligned (multiples of 8x128 lanes); k is a static unrolled loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(logits_ref, w_ref, idx_ref, *, k: int, n_experts: int):
+    x = logits_ref[...].astype(jnp.float32)             # (BT, Epad)
+    e_iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = e_iota < n_experts
+    x = jnp.where(valid, x, NEG)
+
+    # stable softmax over the expert axis
+    m = jnp.max(x, axis=-1, keepdims=True)
+    ex = jnp.exp(x - m)
+    ex = jnp.where(valid, ex, 0.0)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+    # iterative top-k (k static, unrolled): argmax -> record -> mask
+    remaining = probs
+    ws = []
+    ids = []
+    for _ in range(k):
+        best = jnp.max(remaining, axis=-1)              # (BT,)
+        is_best = remaining == best[:, None]
+        # first-match index via iota trick (TPU-safe, no argmax over lanes)
+        bid = jnp.min(jnp.where(is_best, e_iota, n_experts), axis=-1)
+        ws.append(best)
+        ids.append(bid.astype(jnp.int32))
+        remaining = jnp.where(e_iota == bid[:, None], 0.0, remaining)
+
+    w = jnp.stack(ws, axis=-1)                          # (BT, k)
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    w_ref[...] = w
+    idx_ref[...] = jnp.stack(ids, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
+def topk_gating(logits: jnp.ndarray, k: int, block_t: int = 256,
+                interpret: bool = True):
+    """logits: (T, E) -> (weights (T, k) f32, idx (T, k) i32)."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    pad_t = (-t) % bt
+    e_pad = (-e) % 128                                  # lane alignment
+    x = jnp.pad(logits, ((0, pad_t), (0, e_pad)), constant_values=NEG)
+    tp, ep = x.shape
+
+    w, idx = pl.pallas_call(
+        partial(_kernel, k=k, n_experts=e),
+        grid=(tp // bt,),
+        in_specs=[pl.BlockSpec((bt, ep), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((tp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((tp, k), jnp.int32)),
+        interpret=interpret,
+    )(x)
+    return w[:t], idx[:t]

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape) step on the
+# production mesh, print memory_analysis/cost_analysis, and extract roofline
+# terms. No real allocation: params/batches/states are ShapeDtypeStructs.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json f]
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import shardctx
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, data_axes,
+                               make_mini_mesh, make_production_mesh)
+from repro.launch.sharding import (act_sharding, batch_spec, shard_decode_state,
+                                   shard_params)
+from repro.models import build_model, input_specs
+from repro.training.optimizer import make_adamw
+
+SKIPS = {
+    # long_500k needs sub-quadratic attention (DESIGN.md long-context table)
+    ("pixtral-12b", "long_500k"): "pure full attention",
+    ("deepseek-v2-236b", "long_500k"): "full (latent) attention",
+    ("yi-6b", "long_500k"): "pure full attention",
+    ("phi3-mini-3.8b", "long_500k"): "pure full attention",
+    ("internlm2-1.8b", "long_500k"): "pure full attention",
+    ("seamless-m4t-large-v2", "long_500k"): "full-attention decoder",
+}
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def build_step(arch: str, shape_name: str, mesh, cfg_transform=None,
+               microbatch: int = 1):
+    """Returns (step_fn, example_args (abstract), in_shardings, donate)."""
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    model = build_model(cfg)
+    shp = INPUT_SHAPES[shape_name]
+    batch = input_specs(cfg, shape_name)
+
+    params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shard_params(cfg, params_abs, mesh)
+    b_shard = jax.tree.map(batch_spec(cfg, shape_name, mesh), batch)
+
+    if shp.mode == "train":
+        opt_init, opt_update = make_adamw(lr=3e-4, clip=1.0)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        o_shard = jax.tree.map(
+            lambda l, s=None: None, opt_abs)  # placeholder, set below
+        # optimizer state shards like params (mu/nu) + replicated step
+        o_shard = {
+            "mu": shard_params(cfg, opt_abs["mu"], mesh),
+            "nu": shard_params(cfg, opt_abs["nu"], mesh),
+            "step": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+        }
+
+        def train_step(params, opt_state, batch, microbatch: int = 1):
+            def lf(p, mb):
+                loss, mets = model.loss_fn(p, mb)
+                return loss, mets
+
+            if microbatch <= 1:
+                (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(
+                    params, batch)
+            else:
+                # gradient accumulation: peak activation/temp memory drops
+                # ~microbatch-x; per-token collectives unchanged (§Perf A6)
+                mbs = jax.tree.map(
+                    lambda l: l.reshape((microbatch, l.shape[0] // microbatch)
+                                        + l.shape[1:]), batch)
+
+                def acc(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, _), g = jax.value_and_grad(lf, has_aux=True)(
+                        params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b2: a + b2.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + loss), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+                loss = loss / microbatch
+            params, opt_state, stats = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        import functools
+        step = functools.partial(train_step, microbatch=microbatch)
+        return (step, (params_abs, opt_abs, batch),
+                (p_shard, o_shard, b_shard), (0, 1))
+
+    if shp.mode == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cache_len=shp.seq_len)
+        return prefill_step, (params_abs, batch), (p_shard, b_shard), ()
+
+    # decode
+    state_abs = jax.eval_shape(
+        partial(model.init_decode_state, shp.global_batch, shp.seq_len))
+    s_shard = shard_decode_state(cfg, state_abs, mesh)
+
+    def serve_step(params, state, batch):
+        return model.decode_step(params, state, batch)
+
+    return serve_step, (params_abs, state_abs, batch), \
+        (p_shard, s_shard, b_shard), (1,)
+
+
+def run_one(arch: str, shape_name: str, mesh, verbose: bool = True,
+            remat: bool = True, cfg_transform=None,
+            microbatch: int = 1) -> dict:
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": SKIPS[(arch, shape_name)]}
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shp = INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    step, args, in_sh, donate = build_step(arch, shape_name, mesh,
+                                           cfg_transform, microbatch)
+    act_sh = act_sharding(cfg, shape_name, mesh)
+    with mesh, shardctx.activation_sharding(
+            act_sh, remat=remat and shp.mode == "train", mesh=mesh,
+            dp_axes=data_axes(mesh)):
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # loop-trip-aware per-device cost model (see hlo_cost.py; the built-in
+    # compiled.cost_analysis() counts while bodies once)
+    cost = hlo_analyze(hlo)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    flops = float(cost["flops"])                 # per device
+    hbm_bytes = float(cost["hbm_bytes"])         # per device
+    coll = {k: float(v) for k, v in cost["collective_bytes"].items()}
+    coll_total = float(cost["collective_total"])
+    terms = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+
+    na = cfg.active_param_count()
+    tokens = shp.global_batch * (shp.seq_len if shp.mode in
+                                 ("train", "prefill") else 1)
+    mult = 6 if shp.mode == "train" else 2
+    model_flops = mult * na * tokens             # global
+    model_flops_dev = model_flops / n_chips
+
+    out = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mode": shp.mode,
+        "chips": n_chips,
+        "compile_s": round(time.time() - t0, 1),
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": hbm_bytes,
+        "collective_bytes": coll,
+        "collective_total": coll_total,
+        "terms_s": {k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": float(model_flops),
+        "useful_ratio": float(model_flops_dev / flops) if flops else 0.0,
+        "bytes_per_device": {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "peak": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+        },
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name}] compiled in {out['compile_s']}s on "
+              f"{n_chips} chips")
+        print(f"  mem/device: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB")
+        print(f"  HLO/dev: {flops:.3e} flops, {hbm_bytes:.3e} bytes, "
+              f"collectives={coll_total:.3e}B {coll}")
+        print(f"  roofline terms (s): " +
+              ", ".join(f"{k}={v:.4g}" for k, v in terms.items()) +
+              f" -> dominant: {dominant}")
+        print(f"  MODEL_FLOPS(global)={model_flops:.3e} useful/HLO="
+              f"{out['useful_ratio']:.3f}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mini", action="store_true",
+                    help="8-device test mesh (for CI)")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moe-group", type=int, default=0,
+                    help="override MoE dispatch group size (perf lever)")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches (perf lever)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cfg_transform = None
+    if args.moe_group:
+        import dataclasses
+
+        def cfg_transform(cfg, _g=args.moe_group):
+            if cfg.moe is None:
+                return cfg
+            return cfg.replace(
+                moe=dataclasses.replace(cfg.moe, dispatch_group=_g))
+
+    mesh = (make_mini_mesh(multi_pod=args.multi_pod) if args.mini
+            else make_production_mesh(multi_pod=args.multi_pod))
+    print(f"mesh: {dict(mesh.shape)} ({int(np.prod(list(mesh.shape.values())))}"
+          f" devices)")
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+    else:
+        archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+        combos = [(a, s) for a in archs for s in shapes]
+
+    results = []
+    failed = []
+    for arch, shape in combos:
+        try:
+            results.append(run_one(arch, shape, mesh,
+                                   remat=not args.no_remat,
+                                   cfg_transform=cfg_transform,
+                                   microbatch=args.microbatch))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append((arch, shape, str(e)[:200]))
+            results.append({"arch": arch, "shape": shape, "status": "fail",
+                            "error": str(e)[:500]})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skip")
+    print(f"\n=== dry-run summary: {ok} ok, {sk} skip, {len(failed)} fail ===")
+    for a, s, e in failed:
+        print(f"  FAIL {a} x {s}: {e}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,184 @@
+"""Top-contributor analysis over compiled HLO: which collective/dot
+instructions (with loop multiplicity) dominate — the dry-run 'profiler'
+driving §Perf hypotheses.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict
+
+from repro.launch.hlo_cost import (_INSTR, _OPS_CUT, _SHAPE, _TRIP, _WHILE,
+                                   _instr_bytes, _nbytes, _result_type,
+                                   _shapes_in)
+
+_META = re.compile(r'op_name="([^"]*)"')
+
+
+def top_contributors(text: str, top: int = 15):
+    """Returns (collectives, dots): lists of (bytes|flops, mult, op, shape,
+    op_name) sorted desc, with while-loop multiplicity applied."""
+    # 1. map computation name -> while multiplicity (1 level is enough here:
+    #    nested loop mults multiply)
+    mult: Dict[str, int] = {}
+    comp_of_line = []
+    cur = None
+    comps: Dict[str, list] = {}
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace():
+            s = raw.strip()
+            if s.endswith("{") and "->" in s:
+                name = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+                cur = name.split("(")[0].lstrip("%")
+                comps[cur] = []
+            continue
+        if cur is not None:
+            comps[cur].append(raw)
+
+    # find while edges: parent -> (body, trip)
+    edges = []
+    for cname, lines in comps.items():
+        for raw in lines:
+            m = _INSTR.match(raw)
+            if not m:
+                continue
+            wm = _WHILE.search(m.group(2))
+            if wm:
+                tm = _TRIP.search(m.group(2))
+                trip = int(tm.group(1)) if tm else 1
+                edges.append((cname, wm.group(2).lstrip("%"), trip))
+
+    # propagate multiplicity from entry
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%").split("(")[0]
+            break
+    mult = {entry: 1}
+    changed = True
+    while changed:
+        changed = False
+        for parent, body, trip in edges:
+            if parent in mult:
+                m = mult[parent] * trip
+                if mult.get(body) != m:
+                    mult[body] = m
+                    changed = True
+
+    colls = []
+    coll_re = re.compile(
+        r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(")
+    for cname, lines in comps.items():
+        m_c = mult.get(cname, 1)
+        for raw in lines:
+            m = _INSTR.match(raw)
+            if not m:
+                continue
+            rest = m.group(2)
+            cm = coll_re.search(rest)
+            if cm and "-done" not in rest.split("(")[0]:
+                rt = _result_type(rest)
+                nb = _nbytes(rt) * m_c
+                name_m = _META.search(rest)
+                colls.append((nb, m_c, cm.group(1), rt.strip()[:60],
+                              (name_m.group(1) if name_m else "")[:90]))
+    colls.sort(reverse=True)
+    return colls[:top]
+
+
+def top_hbm(text: str, top: int = 15):
+    """Rank instructions by result+operand bytes x loop multiplicity (the
+    same model hlo_cost.analyze sums into the memory roofline term)."""
+    comps: Dict[str, list] = {}
+    cur = None
+    result_shape: Dict[str, tuple] = {}
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace():
+            s = raw.strip()
+            if s.endswith("{") and "->" in s:
+                name = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+                cur = name.split("(")[0].lstrip("%")
+                comps[cur] = []
+                for pm in re.finditer(
+                        r"([\w.\-]+):\s*(\([^)]*\)|[\w]+\[[0-9,]*\]"
+                        r"(?:\{[0-9,]*\})?)", s):
+                    sh = _shapes_in(pm.group(2))
+                    if sh:
+                        result_shape["%" + pm.group(1)] = sh[0]
+            continue
+        if cur is not None:
+            comps[cur].append(raw)
+
+    # reuse multiplicity propagation from top_contributors
+    edges = []
+    entry = None
+    for cname, lines in comps.items():
+        for raw in lines:
+            m = _INSTR.match(raw)
+            if m:
+                wm = _WHILE.search(m.group(2))
+                if wm:
+                    tm = _TRIP.search(m.group(2))
+                    edges.append((cname, wm.group(2).lstrip("%"),
+                                  int(tm.group(1)) if tm else 1))
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = line.split()[1].lstrip("%").split("(")[0]
+            break
+    mult = {entry: 1}
+    changed = True
+    while changed:
+        changed = False
+        for parent, body, trip in edges:
+            if parent in mult and mult.get(body) != mult[parent] * trip:
+                mult[body] = mult[parent] * trip
+                changed = True
+
+    from repro.launch.hlo_cost import _BYTES, _elems
+    rows = []
+    skip_ops = ("parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "partition-id", "replica-id",
+                "iota", "while", "domain", "optimization-barrier")
+    for cname, lines in comps.items():
+        m_c = mult.get(cname, 1)
+        for raw in lines:
+            m = _INSTR.match(raw)
+            if not m:
+                continue
+            name, rest = m.group(1), m.group(2)
+            rt = _result_type(rest)
+            sh = _shapes_in(rt)
+            if sh:
+                result_shape[name] = sh[0]
+            opm = _OPS_CUT.search(rest)
+            if not opm or opm.group(1) in skip_ops:
+                continue
+            res_b = _nbytes(rt)
+            attrs_cut = re.split(r"(?:calls=|to_apply=|condition=)",
+                                 rest)[0]
+            arg_str = attrs_cut.split("(", 1)[1] if "(" in attrs_cut else ""
+            op_sizes = []
+            for ref in re.findall(r"%[\w.\-]+", arg_str):
+                if ref in result_shape:
+                    dt, dims = result_shape[ref]
+                    op_sizes.append(_elems(dims) * _BYTES[dt])
+            nb = _instr_bytes(opm.group(1), res_b, op_sizes)
+            if nb * m_c > 0:
+                name_m = _META.search(rest)
+                rows.append((nb * m_c, m_c, opm.group(1), rt.strip()[:46],
+                             (name_m.group(1) if name_m else "")[:80]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    import sys
+    text = open(sys.argv[1]).read()
+    print("top collectives (bytes x loop-mult):")
+    for nb, m, op, shape, name in top_contributors(text):
+        print(f"  {nb / 2**30:9.2f} GiB x{m:4d} {op:18s} {shape:40s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Activation-sharding context: the launcher installs PartitionSpecs here and
+model code calls ``constrain_act`` / ``constrain_qkv`` at layer boundaries.
+Outside a mesh context these are no-ops, so tests and CPU runs are
+unaffected.
+
+Why ``constrain_qkv`` exists (EXPERIMENTS.md §Perf, hypothesis A1): with
+between-layer activations sequence-sharded on "model" (Megatron-SP style,
+needed so remat carries fit HBM), XLA re-gathers K/V inside every q-chunk
+scan iteration — collectives are not hoisted out of while loops. Pinning
+q/k/v to head-sharded right after the projections turns that into ONE
+seq->head reshard per layer.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def current_act_spec():
+    return getattr(_state, "act_spec", None)
+
+
+def current_remat() -> bool:
+    return getattr(_state, "remat", False)
+
+
+def _mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(act_spec=None, remat: bool = False, mesh=None,
+                        dp_axes=None):
+    """act_spec: NamedSharding for (B, T, D) activations between layers."""
+    prev = (current_act_spec(), current_remat(), _mesh(),
+            getattr(_state, "dp_axes", None))
+    _state.act_spec = act_spec
+    _state.remat = remat
+    _state.mesh = mesh
+    _state.dp_axes = dp_axes
+    try:
+        yield
+    finally:
+        (_state.act_spec, _state.remat, _state.mesh,
+         _state.dp_axes) = prev
+
+
+def constrain_act(x):
+    spec = current_act_spec()
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_qkv(x):
+    """Pin a (B, T, H, hd) projection to head-sharded on "model" (batch on
+    the data axes) when H divides; no-op outside a launcher context."""
+    mesh = _mesh()
+    if mesh is None or x.ndim != 4:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n_model = mesh.shape["model"]
+    dp = getattr(_state, "dp_axes", None)
+    b, t, h, hd = x.shape
+    bdim = dp if (dp and b % _axes_size(mesh, dp) == 0) else None
+    hdim = "model" if h % n_model == 0 and h >= n_model else None
+    if hdim is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bdim, None, hdim, None)))
+
+
+def constrain_tokens(x, dim: int = 1):
+    """Pin a tensor's token dim to "model"-sharded (the §Perf A5 lever: the
+    MoE combine's (g, t, d) output becomes a reduce-scatter over the expert
+    shards instead of a full all-reduce). No-op outside a launcher context
+    or when the dim does not divide."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    n_model = mesh.shape["model"]
+    if x.shape[dim] % n_model or x.shape[dim] < n_model:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[dim] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _axes_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

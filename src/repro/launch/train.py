@@ -1,0 +1,100 @@
+"""Distributed training launcher.
+
+On real hardware this runs the pjit train loop on the production mesh; on
+this CPU container it runs reduced configs on the host device (or the mini
+host-device mesh via --mini-mesh, set XLA_FLAGS yourself for that).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-v2-lite \
+      --reduced --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.data import lm_batches, make_topic_corpus
+from repro.launch import shardctx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import act_sharding, shard_params
+from repro.models import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import cosine_schedule, make_adamw
+
+
+def train(arch: str, reduced: bool = True, steps: int = 100,
+          batch_size: int = 8, seq_len: int = 128, lr: float = 3e-3,
+          seed: int = 0, save: str | None = None, log=print,
+          production_mesh: bool = False):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    log(f"arch={cfg.name} params={n_params/1e6:.1f}M layers={cfg.num_layers}")
+
+    opt_init, opt_update = make_adamw(
+        lr=lr, clip=1.0, schedule=cosine_schedule(1.0, warmup=20,
+                                                  total=steps))
+    opt_state = opt_init(params)
+    corpus = make_topic_corpus(cfg.vocab_size, n_topics=8, seed=seed)
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return model.loss_fn(p, batch)
+        (loss, mets), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, stats = opt_update(grads, opt_state, params)
+        return params, opt_state, loss, mets, stats["grad_norm"]
+
+    if production_mesh:
+        mesh = make_production_mesh()
+        p_shard = shard_params(cfg, jax.eval_shape(lambda: params), mesh)
+        step_fn = jax.jit(train_step, in_shardings=(p_shard, None, None))
+    else:
+        step_fn = jax.jit(train_step)
+
+    losses = []
+    t0 = time.time()
+    for i, tokens in enumerate(lm_batches(corpus, batch_size, seq_len,
+                                          steps, seed=seed + 1)):
+        batch = {"tokens": jnp.asarray(tokens[:, :seq_len])}
+        if cfg.frontend == "vision":
+            batch["patches"] = jnp.zeros(
+                (batch_size, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+        if cfg.frontend == "audio":
+            batch["frames"] = jnp.zeros(
+                (batch_size, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+        params, opt_state, loss, mets, gnorm = step_fn(params, opt_state,
+                                                       batch)
+        losses.append(float(loss))
+        if i % max(1, steps // 10) == 0:
+            log(f"step {i:5d} loss={float(loss):.4f} "
+                f"xent={float(mets['xent']):.4f} gnorm={float(gnorm):.2f} "
+                f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+    if save:
+        ckpt.save(save, params)
+        log(f"saved params to {save}")
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+    train(args.arch, args.reduced, args.steps, args.batch, args.seq, args.lr,
+          save=args.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""GQA attention with global / sliding-window(local) / chunked masking.
+
+Three entry points:
+  * ``attn_apply(..., mode="full")``    — train / no-cache forward.
+  * ``attn_apply(..., mode="prefill")`` — forward + build a decode cache.
+  * ``attn_apply(..., mode="decode")``  — one token against the cache.
+
+Prefill/train attention is q-chunked (``lax.scan`` over query blocks) so the
+(T, S) score tensor is never materialised for long sequences — this is what
+keeps the 32k prefill dry-run inside HBM. Decode caches:
+  global  -> full-length buffer, write at ``pos``
+  local   -> ring buffer of ``window`` slots, write at ``pos % window``
+  chunked -> ring buffer of ``chunk`` slots; only slots from the current
+             attention chunk are valid (llama4 iRoPE semantics)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shardctx
+from repro.models.common import apply_rope, dense_init
+
+Q_CHUNK = 1024
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, h * hd, dtype).reshape(d, h, hd),
+        "wk": dense_init(k2, d, kvh * hd, dtype).reshape(d, kvh, hd),
+        "wv": dense_init(k3, d, kvh * hd, dtype).reshape(d, kvh, hd),
+        "wo": dense_init(k4, h * hd, d, dtype).reshape(h, hd, d),
+    }
+
+
+def _mask(qpos, kpos, kind: str, cfg, causal: bool):
+    """(Tq, Sk) boolean validity mask from absolute positions."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    if not causal:
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    m = k <= q
+    if kind == "local":
+        m &= k > q - cfg.window
+    elif kind == "chunked":
+        m &= (k // cfg.chunk) == (q // cfg.chunk)
+    return m
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Tq,KVH,G,hd)  k,v: (B,S,KVH,hd)  mask: (Tq,S) -> (B,Tq,KVH,G,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("btngd,bsnd->bngts", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bngts,bsnd->btngd", probs, v)
+
+
+def sdpa_any(q, k, v, qpos, kpos, kind, cfg, causal=True):
+    """Full attention, q-chunked when the sequence is long.
+
+    q: (B,T,H,hd) grouped internally for GQA; k,v: (B,S,KVH,hd).
+    qpos: (T,), kpos: (S,) absolute positions.
+    """
+    b, t, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    vd = v.shape[-1]                     # may differ from hd (MLA)
+    qg = q.reshape(b, t, kvh, g, hd)
+    if t < 2 * Q_CHUNK or t % Q_CHUNK != 0:
+        out = _sdpa(qg, k, v, _mask(qpos, kpos, kind, cfg, causal))
+        return out.reshape(b, t, h, vd)
+
+    n = t // Q_CHUNK
+    qc = qg.reshape(b, n, Q_CHUNK, kvh, g, hd)
+    pc = qpos.reshape(n, Q_CHUNK)
+
+    def body(_, xs):
+        qi, pi = xs
+        oi = _sdpa(qi, k, v, _mask(pi, kpos, kind, cfg, causal))
+        return None, oi
+
+    _, out = jax.lax.scan(body, None, (jnp.moveaxis(qc, 1, 0), pc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, t, h, vd)
+    return out
+
+
+def _ring_len(kind: str, cfg) -> int:
+    return {"local": cfg.window, "chunked": cfg.chunk}.get(kind, 0)
+
+
+def init_cache(cfg, kind, batch, cache_len, dtype):
+    ring = _ring_len(kind, cfg)
+    s = ring if ring else cache_len
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, s, kvh, hd), dtype),
+        "v": jnp.zeros((batch, s, kvh, hd), dtype),
+    }
+
+
+def _fill_cache(cfg, kind, k, v, t, cache_len):
+    """Convert prefill k/v (already rope'd) into the decode cache layout."""
+    ring = _ring_len(kind, cfg)
+    if not ring:
+        pad = cache_len - t
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k, "v": v}
+    # ring slot s holds the latest position p <= t-1 with p % ring == s
+    s = jnp.arange(ring)
+    src = (t - 1) - ((t - 1 - s) % ring)           # may be < 0 when t < ring
+    src_c = jnp.clip(src, 0, t - 1)
+    return {"k": k[:, src_c], "v": v[:, src_c]}
+
+
+def _decode_valid(kind: str, cfg, slots, pos):
+    """Validity of each cache slot when decoding token at absolute ``pos``."""
+    if kind == "global":
+        return slots <= pos
+    ring = _ring_len(kind, cfg)
+    w = pos % ring
+    slot_pos = pos - ((w - slots) % ring)          # abs position held by slot
+    if kind == "local":
+        return slot_pos >= 0
+    return (slots <= w) & (slot_pos >= 0)          # chunked: current chunk only
+
+
+def attn_apply(p, cfg, kind, x, positions, mode, cache=None, pos=None,
+               cache_len=0, causal=True):
+    """Returns (out, new_cache). new_cache is None in full mode."""
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dnk->btnk", x, p["wk"])
+    v = jnp.einsum("btd,dnk->btnk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if mode in ("full", "prefill"):
+        # head-shard inside attention (one seq->head reshard per layer
+        # instead of per-q-chunk K/V gathers; see shardctx docstring)
+        q, k, v = (shardctx.constrain_qkv(z) for z in (q, k, v))
+
+    if mode in ("full", "prefill"):
+        qpos = positions[0] if positions.ndim == 2 else positions
+        out = sdpa_any(q, k, v, qpos, qpos, kind, cfg, causal)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _fill_cache(cfg, kind, k, v, t, cache_len)
+    else:  # decode: t == 1
+        ring = _ring_len(kind, cfg)
+        idx = pos % ring if ring else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        slots = jnp.arange(ck.shape[1])
+        valid = _decode_valid(kind, cfg, slots, pos)
+        kvh, hd = ck.shape[2], ck.shape[3]
+        g = cfg.num_heads // kvh
+        qg = q.reshape(b, 1, kvh, g, hd)
+        scores = jnp.einsum("btngd,bsnd->bngts", qg, ck).astype(jnp.float32)
+        scores = scores * (hd ** -0.5)
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bngts,bsnd->btngd", probs, cv)
+        out = out.reshape(b, 1, cfg.num_heads, hd)
+        new_cache = {"k": ck, "v": cv}
+
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder): static k/v memory, no cache update.
+
+def cross_attn_init(key, cfg, dtype):
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attn_apply(p, cfg, x, memory_kv):
+    """x: (B,T,D); memory_kv: {"k","v"} (B,S,KVH,hd) precomputed."""
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k, v = memory_kv["k"], memory_kv["v"]
+    kvh, hd = k.shape[2], k.shape[3]
+    g = cfg.num_heads // kvh
+    qg = q.reshape(b, t, kvh, g, hd)
+    mask = jnp.ones((t, k.shape[1]), bool)
+    out = _sdpa(qg, k, v, mask).reshape(b, t, cfg.num_heads, hd)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def cross_attn_memory(p, x_enc):
+    """Precompute cross-attention k/v from encoder output."""
+    k = jnp.einsum("bsd,dnk->bsnk", x_enc, p["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x_enc, p["wv"])
+    return {"k": k, "v": v}

@@ -1,0 +1,89 @@
+"""Shared building blocks: init helpers, norms, RoPE, dense FFNs.
+
+All modules are pure functions over nested-dict params: ``*_init(key, ...)``
+returns the param pytree, ``*_apply(params, ...)`` runs it. No framework
+dependency (flax/optax are not available offline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm_init(dim: int, dtype):
+    return jnp.ones((dim,), dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-rotation / llama convention)
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., T, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., T, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense gated FFN (SwiGLU / GeGLU)
+
+def ffn_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def ffn_apply(p, x, kind: str = "swiglu"):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+    return jnp.einsum("...f,fd->...d", act * u, p["w_down"])
+
+
+def gelu_mlp_init(key, dims, dtype):
+    """Plain MLP used by the predictor head: dims = [in, hid, ..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def gelu_mlp_apply(p, x, n_layers: int):
+    for i in range(n_layers):
+        x = jnp.einsum("...d,df->...f", x, p[f"w{i}"]) + p[f"b{i}"]
+        if i < n_layers - 1:
+            x = jax.nn.gelu(x)
+    return x

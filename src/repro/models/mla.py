@@ -1,0 +1,117 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill materialise per-head k/v from the compressed latent; decode
+uses the *absorbed* formulation so the KV cache is only
+(kv_lora_rank + rope_head_dim) per token — MLA's entire point, and the reason
+the 128-head deepseek-v2 decode fits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shardctx
+from repro.models.attention import NEG_INF, sdpa_any
+from repro.models.common import apply_rope, dense_init, rms_norm, rms_norm_init
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], d, m.kv_lora_rank + m.rope_head_dim, dtype),
+        "kv_ln": rms_norm_init(m.kv_lora_rank, dtype),
+        "w_uk": dense_init(ks[1], m.kv_lora_rank, h * m.nope_head_dim, dtype)
+                .reshape(m.kv_lora_rank, h, m.nope_head_dim),
+        "w_uv": dense_init(ks[2], m.kv_lora_rank, h * m.v_head_dim, dtype)
+                .reshape(m.kv_lora_rank, h, m.v_head_dim),
+        "wo": dense_init(ks[3], h * m.v_head_dim, d, dtype)
+              .reshape(h, m.v_head_dim, d),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[4], d, m.q_lora_rank, dtype)
+        p["q_ln"] = rms_norm_init(m.q_lora_rank, dtype)
+        p["w_uq"] = dense_init(ks[5], m.q_lora_rank, h * qk, dtype) \
+            .reshape(m.q_lora_rank, h, qk)
+    else:
+        p["w_q"] = dense_init(ks[4], d, h * qk, dtype).reshape(d, h, qk)
+    return p
+
+
+def _project_q(p, cfg, x, positions):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = rms_norm(jnp.einsum("btd,dr->btr", x, p["w_dq"]), p["q_ln"],
+                      cfg.norm_eps)
+        q = jnp.einsum("btr,rhk->bthk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, p["w_q"])
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = apply_rope(q[..., m.nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_ckv(p, cfg, x, positions):
+    m = cfg.mla
+    ckv_full = jnp.einsum("btd,dc->btc", x, p["w_dkv"])
+    ckv = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank:][:, :, None, :]   # (B,T,1,r)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_init_cache(cfg, batch, cache_len, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, m.rope_head_dim), dtype),
+    }
+
+
+def mla_apply(p, cfg, x, positions, mode, cache=None, pos=None, cache_len=0):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+
+    if mode in ("full", "prefill"):
+        q_nope, q_rope = _project_q(p, cfg, x, positions)
+        ckv, k_rope = _project_ckv(p, cfg, x, positions)
+        k_nope = jnp.einsum("btc,chn->bthn", ckv, p["w_uk"])
+        v = jnp.einsum("btc,chn->bthn", ckv, p["w_uv"])
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, t, h, m.rope_head_dim))], -1)
+        # head-shard inside attention (see shardctx.constrain_qkv)
+        q, k, v = (shardctx.constrain_qkv(z) for z in (q, k, v))
+        qpos = positions[0] if positions.ndim == 2 else positions
+        out = sdpa_any(q, k, v, qpos, qpos, "global", cfg, causal=True)
+        y = jnp.einsum("bthv,hvd->btd", out, p["wo"])
+        new_cache = None
+        if mode == "prefill":
+            pad = cache_len - t
+            new_cache = {
+                "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+                "krope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+            }
+        return y, new_cache
+
+    # ---- decode: absorbed formulation, t == 1
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    ckv_new, krope_new = _project_ckv(p, cfg, x, positions)
+    c = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
+    r = jax.lax.dynamic_update_slice(cache["krope"], krope_new, (0, pos, 0))
+    q_abs = jnp.einsum("bthn,chn->bthc", q_nope, p["w_uk"])
+    scores = (jnp.einsum("bthc,bsc->bhts", q_abs, c)
+              + jnp.einsum("bthr,bsr->bhts", q_rope, r)).astype(jnp.float32)
+    scores = scores * scale
+    valid = jnp.arange(c.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhts,bsc->bthc", probs, c)
+    out = jnp.einsum("bthc,chv->bthv", o_lat, p["w_uv"])
+    y = jnp.einsum("bthv,hvd->btd", out, p["wo"])
+    return y, {"ckv": c, "krope": r}

@@ -1,0 +1,264 @@
+"""Public model facade: ``build_model(cfg)`` -> init / loss_fn / prefill /
+decode_step / input_specs for any assigned architecture.
+
+Step functions are plain pure functions (pjit-able); the launcher decides
+shardings. Decode state = {"pos": i32 scalar, "caches": pytree}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import encdec, transformer
+from repro.models.common import dtype_of, rms_norm
+
+
+def _xent(logits, labels, mask=None):
+    """Mean next-token cross-entropy in f32. labels: (B,T) i32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# (B,S,V) f32 logits above this budget use the seq-chunked loss below —
+# a 256x4096x262k logits tensor would be ~1 TB and must never materialise
+_XENT_CHUNK_BUDGET = 1 << 28
+_XENT_CHUNK = 512
+
+
+def _xent_chunked(x, labels, unembed_fn):
+    """Sequence-chunked next-token loss: per-chunk logits are formed,
+    reduced to a scalar and rematerialised in the backward pass, so peak
+    memory is (B, chunk, V) instead of (B, S, V)."""
+    b, t, _ = x.shape
+    c = _XENT_CHUNK
+    n = t // c
+
+    def chunk_loss(xc, yc):
+        logits = unembed_fn(xc)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(ll)
+
+    chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+
+    def body(tot, xs):
+        xc, yc = xs
+        return tot + chunk_loss(xc, yc), None
+
+    xs = (jnp.moveaxis(x[:, : n * c].reshape(b, n, c, -1), 1, 0),
+          jnp.moveaxis(labels[:, : n * c].reshape(b, n, c), 1, 0))
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    count = b * n * c
+    if t % c:  # remainder chunk
+        tot = tot + chunk_loss(x[:, n * c:], labels[:, n * c:])
+        count = b * t
+    return -tot / count
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    loss_fn: Callable[..., Any]           # (params, batch) -> (loss, metrics)
+    forward: Callable[..., Any]           # (params, batch) -> logits
+    prefill: Callable[..., Any]           # (params, batch, cache_len) -> (logits, state)
+    decode_step: Callable[..., Any]       # (params, state, batch) -> (logits, state)
+    init_decode_state: Callable[..., Any]  # (batch_size, cache_len) -> state
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only family (dense / moe / ssm / hybrid / vlm)
+
+def _build_decoder(cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg)
+
+    def init(key):
+        return transformer.lm_init(key, cfg)
+
+    def forward(params, batch):
+        logits, _, extras, n_prefix = transformer.lm_apply(
+            params, cfg, batch["tokens"], batch.get("patches"), mode="full")
+        return logits
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        x, n_prefix = transformer.embed(params, cfg, tokens,
+                                        batch.get("patches"))
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        x, _, extras = transformer.stack_apply(params["stack"], cfg, x,
+                                               positions, "full")
+        # next-token loss over the text region only
+        xt = x[:, n_prefix:, :][:, :-1]
+        labels = tokens[:, 1:]
+        if xt.shape[0] * xt.shape[1] * cfg.vocab_size > _XENT_CHUNK_BUDGET:
+            loss = _xent_chunked(
+                xt, labels, lambda h: transformer.unembed(params, cfg, h))
+        else:
+            loss = _xent(transformer.unembed(params, cfg, xt), labels)
+        aux = transformer.collect_moe_aux(cfg, extras)
+        coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
+        return loss + coef * aux, {"xent": loss, "moe_aux": aux}
+
+    def prefill(params, batch, cache_len: int):
+        logits, caches, _, n_prefix = transformer.lm_apply(
+            params, cfg, batch["tokens"], batch.get("patches"),
+            mode="prefill", cache_len=cache_len)
+        t = batch["tokens"].shape[1] + n_prefix
+        state = {"pos": jnp.asarray(t, jnp.int32), "caches": caches}
+        return logits[:, -1], state
+
+    def decode_step(params, state, batch):
+        logits, caches, extras, _ = transformer.lm_apply(
+            params, cfg, batch["tokens"], None, mode="decode",
+            caches=state["caches"], pos=state["pos"])
+        new_state = {"pos": state["pos"] + 1, "caches": caches}
+        return logits[:, -1], new_state
+
+    def init_decode_state(batch_size: int, cache_len: int, pos: int = 0):
+        caches = transformer.stack_cache_init(cfg, batch_size, cache_len,
+                                              dtype)
+        return {"pos": jnp.asarray(pos, jnp.int32), "caches": caches}
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step,
+                 init_decode_state)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder family (audio)
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg)
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "tok_emb": (jax.random.normal(
+                k1, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+            ).astype(dtype),
+            "encoder": encdec.encoder_init(k2, cfg, dtype),
+            "decoder": encdec.decoder_init(k3, cfg, dtype),
+            "final_ln": jnp.ones((cfg.d_model,), dtype),
+            "head": (jax.random.normal(
+                k4, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                * cfg.d_model ** -0.5).astype(dtype),
+        }
+
+    def _decode_stack(params, x, positions, memory, mode, caches=None,
+                      pos=None, cache_len=0):
+        x, new_caches = encdec.decoder_apply(
+            params["decoder"], cfg, x, positions, memory, mode, caches, pos,
+            cache_len)
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = jnp.einsum("btd,dv->btv", x,
+                            params["head"]).astype(jnp.float32)
+        return logits, new_caches
+
+    def _hidden(params, batch):
+        enc = encdec.encoder_apply(params["encoder"], cfg, batch["frames"])
+        memory = encdec.cross_memory(params["decoder"], cfg, enc)
+        x = jnp.take(params["tok_emb"], batch["tokens"], axis=0)
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        x, _ = encdec.decoder_apply(params["decoder"], cfg, x, positions,
+                                    memory, "full")
+        return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+    def _head(params, h):
+        return jnp.einsum("btd,dv->btv", h, params["head"]).astype(jnp.float32)
+
+    def forward(params, batch):
+        return _head(params, _hidden(params, batch))
+
+    def loss_fn(params, batch):
+        h = _hidden(params, batch)[:, :-1]
+        labels = batch["tokens"][:, 1:]
+        if h.shape[0] * h.shape[1] * cfg.vocab_size > _XENT_CHUNK_BUDGET:
+            loss = _xent_chunked(h, labels, lambda hh: _head(params, hh))
+        else:
+            loss = _xent(_head(params, h), labels)
+        return loss, {"xent": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch, cache_len: int):
+        enc = encdec.encoder_apply(params["encoder"], cfg, batch["frames"])
+        memory = encdec.cross_memory(params["decoder"], cfg, enc)
+        x = jnp.take(params["tok_emb"], batch["tokens"], axis=0)
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        logits, caches = _decode_stack(params, x, positions, memory,
+                                       "prefill", cache_len=cache_len)
+        state = {"pos": jnp.asarray(t, jnp.int32), "caches": caches,
+                 "memory": memory}
+        return logits[:, -1], state
+
+    def decode_step(params, state, batch):
+        x = jnp.take(params["tok_emb"], batch["tokens"], axis=0)
+        b = x.shape[0]
+        positions = jnp.full((b, 1), state["pos"], jnp.int32)
+        logits, caches = _decode_stack(params, x, positions, state["memory"],
+                                       "decode", state["caches"],
+                                       state["pos"])
+        new_state = dict(state, pos=state["pos"] + 1, caches=caches)
+        return logits[:, -1], new_state
+
+    def init_decode_state(batch_size: int, cache_len: int, pos: int = 0):
+        caches = encdec.decoder_cache_init(cfg, batch_size, cache_len, dtype)
+        kvh, hd = cfg.num_kv_heads, cfg.hd
+        memory = {
+            "k": jnp.zeros((cfg.num_layers, batch_size, cfg.frontend_len,
+                            kvh, hd), dtype),
+            "v": jnp.zeros((cfg.num_layers, batch_size, cfg.frontend_len,
+                            kvh, hd), dtype),
+        }
+        return {"pos": jnp.asarray(pos, jnp.int32), "caches": caches,
+                "memory": memory}
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step,
+                 init_decode_state)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.encdec is not None:
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input stubs for dry-runs (no allocation)
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Stand-in inputs for (arch x input-shape): train/prefill batches or a
+    decode step batch. Modality frontends are stubbed embeddings (carve-out).
+    """
+    shp = INPUT_SHAPES[shape_name]
+    b = shp.global_batch
+    f32, i32 = jnp.float32, jnp.int32
+    bf16 = dtype_of(cfg)
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    if shp.mode in ("train", "prefill"):
+        s = shp.seq_len
+        batch: Dict[str, Any] = {}
+        if cfg.frontend == "vision":
+            batch["tokens"] = sds((b, s - cfg.frontend_len), i32)
+            batch["patches"] = sds((b, cfg.frontend_len, cfg.frontend_dim),
+                                   bf16)
+        elif cfg.frontend == "audio":
+            batch["tokens"] = sds((b, s), i32)
+            batch["frames"] = sds((b, cfg.frontend_len, cfg.frontend_dim),
+                                  bf16)
+        else:
+            batch["tokens"] = sds((b, s), i32)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((b, 1), i32)}

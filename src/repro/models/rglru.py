@@ -1,0 +1,104 @@
+"""Griffin recurrent block: causal conv + Real-Gated LRU (arXiv:2402.19427).
+
+Training-time recurrence uses ``jax.lax.associative_scan`` (the RG-LRU is a
+per-channel linear recurrence h_t = a_t h_{t-1} + b_t), so the 500k-token
+sequence parallelises log-depth instead of running a length-T loop. Decode is
+a single O(1) update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+_C = 8.0  # RG-LRU gate exponent constant (Griffin §2.4)
+
+
+def rglru_width(cfg) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg, dtype):
+    w = rglru_width(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),       # recurrent branch in
+        "w_gate": dense_init(ks[1], d, w, dtype),    # gelu gate branch in
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru.d_conv, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ks[3], w, w, dtype),       # input gate
+        "w_r": dense_init(ks[4], w, w, dtype),       # recurrence gate
+        "lam": jnp.full((w,), 4.0, jnp.float32),     # a = sigmoid(lam) ~ .982
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(p, xr):
+    """xr: (..., W) conv output -> (a (f32), gated_input (f32))."""
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xr, p["w_i"])
+                       .astype(jnp.float32))
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xr, p["w_r"])
+                       .astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"])      # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * xr.astype(jnp.float32)
+    return a, b
+
+
+def _conv_full(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i: i + x.shape[1]] * w[i]
+    return out + b
+
+
+def rglru_apply_full(p, cfg, x, return_state: bool = False):
+    """x: (B,T,D) -> (B,T,D)."""
+    xw = jnp.einsum("btd,dw->btw", x, p["w_x"])
+    xr = _conv_full(xw, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, xr)                             # (B,T,W) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"]))
+    y = (h.astype(x.dtype)) * gate
+    out = jnp.einsum("btw,wd->btd", y, p["w_out"])
+    if not return_state:
+        return out
+    kc = cfg.rglru.d_conv - 1
+    t = x.shape[1]
+    tail = xw[:, max(0, t - kc): t]
+    if t < kc:
+        tail = jnp.pad(tail, ((0, 0), (kc - t, 0), (0, 0)))
+    return out, {"h": h[:, -1], "conv": tail.astype(x.dtype)}
+
+
+def rglru_init_state(cfg, batch, dtype):
+    w = rglru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), dtype),
+    }
+
+
+def rglru_step(p, cfg, x, state):
+    """x: (B,1,D) -> (B,1,D); O(1) update."""
+    xw = jnp.einsum("btd,dw->btw", x, p["w_x"])[:, 0]         # (B,W)
+    conv_buf = jnp.concatenate([state["conv"], xw[:, None]], axis=1)
+    xr = jnp.einsum("bkw,kw->bw", conv_buf, p["conv_w"]) + p["conv_b"]
+    a, b = _gates(p, xr)
+    h = a * state["h"] + b
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"]))[:, 0]
+    y = h.astype(x.dtype) * gate
+    y = jnp.einsum("bw,wd->bd", y, p["w_out"])[:, None]
+    return y, {"h": h, "conv": conv_buf[:, 1:]}

@@ -1,0 +1,192 @@
+"""Mamba-2 block with the SSD (state-space duality) chunked algorithm.
+
+Follows arXiv:2405.21060 (the "quadratic-within-chunk, linear-across-chunk"
+formulation): within a chunk the kernel is an attention-like masked-decay
+matmul; across chunks a small (H, P, N) state is carried by a sequential
+scan. Decode is a single O(1) state update — this is why mamba2 runs the
+long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm, rms_norm_init
+
+
+def ssd_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def ssd_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssd_dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * s.d_state + nheads
+    return {
+        "w_in": dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "A_log": jnp.zeros((nheads,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm": rms_norm_init(d_inner, dtype),
+        "w_out": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv_full(x, w, b):
+    """Depthwise causal conv along time. x: (B,T,C); w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i: i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) with out[i,j] = sum_{j<t<=i} a_t (j<=i)."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _split_in(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssd_dims(cfg)
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+         2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, xc, B, C, dt
+
+
+def ssd_apply_full(p, cfg, x, return_state: bool = False):
+    """x: (B,T,D) -> (B,T,D); chunked SSD over the full sequence.
+
+    With ``return_state`` also returns the decode state after position T-1
+    (padding is dt=0 / x=0, so it does not perturb the state).
+    """
+    s = cfg.ssm
+    b, t, _ = x.shape
+    d_inner, nheads, conv_dim = ssd_dims(cfg)
+    hp = s.headdim
+
+    z, xc, B, C, dt = _split_in(cfg, jnp.einsum("btd,de->bte", x, p["w_in"]))
+    conv_in = jnp.concatenate([xc, B, C], -1)
+    xbc = jax.nn.silu(_causal_conv_full(conv_in, p["conv_w"], p["conv_b"]))
+    xc, B, C = jnp.split(xbc, [d_inner, d_inner + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    xh = xc.reshape(b, t, nheads, hp).astype(jnp.float32)
+    Bf = B.astype(jnp.float32)                                   # (B,T,N)
+    Cf = C.astype(jnp.float32)
+
+    # pad T to a multiple of the chunk length
+    l = s.chunk
+    pad = (-t) % l
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // l
+
+    xch = xh.reshape(b, nc, l, nheads, hp)
+    Bch = Bf.reshape(b, nc, l, -1)
+    Cch = Cf.reshape(b, nc, l, -1)
+    dtc = dt.reshape(b, nc, l, nheads)
+    a = dtc * A                                                  # (B,nc,L,H)
+    a_cum = jnp.cumsum(a, axis=2)
+
+    # within-chunk (diagonal) term
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(a, -1, 2)))              # (B,nc,H,L,L)
+    xdt = xch * dtc[..., None]
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        Cch, Bch, Lmat, xdt)
+
+    # per-chunk end states and the cross-chunk recurrence
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)          # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bch,
+                        decay_states * dtc, xch)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_fn(h, xs):
+        st, dec = xs
+        h_new = dec[:, :, None, None] * h + st
+        return h_new, h                                          # emit PREV state
+
+    h0 = jnp.zeros((b, nheads, hp, Bch.shape[-1]), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                          # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cch, h_prev,
+                       jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(b, nc * l, nheads, hp)[:, :t]
+    y = y + p["D"][None, None, :, None] * xh[:, :t]
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bti,id->btd", y, p["w_out"])
+    if not return_state:
+        return out
+    # decode state after position T-1: SSD carry + last d_conv-1 conv inputs
+    kc = s.d_conv - 1
+    tail = conv_in[:, max(0, t - kc): t]
+    if t < kc:
+        tail = jnp.pad(tail, ((0, 0), (kc - t, 0), (0, 0)))
+    return out, {"h": h_final, "conv": tail.astype(x.dtype)}
+
+
+def ssd_init_state(cfg, batch, dtype):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = ssd_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, s.headdim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_step(p, cfg, x, state):
+    """x: (B,1,D); O(1) recurrent update."""
+    s = cfg.ssm
+    b = x.shape[0]
+    d_inner, nheads, _ = ssd_dims(cfg)
+    hp = s.headdim
+
+    z, xc, B, C, dt = _split_in(cfg, jnp.einsum("btd,de->bte", x, p["w_in"]))
+    xbc = jnp.concatenate([xc, B, C], -1)[:, 0]                  # (B,conv_dim)
+    conv_buf = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    out = jnp.einsum("bkc,kc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    xbc_c = jax.nn.silu(out)
+    xc, B, C = jnp.split(xbc_c, [d_inner, d_inner + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                         # (B,H)
+    xh = xc.reshape(b, nheads, hp).astype(jnp.float32)
+    Bf = B.astype(jnp.float32)                                   # (B,N)
+    Cf = C.astype(jnp.float32)
+
+    h = state["h"] * dA[:, :, None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = jnp.einsum("btd,de->bte", y, p["w_out"])
+    return y, {"h": h, "conv": conv_buf[:, 1:]}

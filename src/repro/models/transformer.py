@@ -1,0 +1,300 @@
+"""Decoder assembly: blocks -> scan-over-layer-groups -> LM.
+
+Layer layout (keeps HLO size ~O(pattern length), not O(num_layers)):
+  head blocks   — ``moe.first_dense_layers`` unrolled layers (dense FFN)
+  scan blocks   — ``G`` repetitions of ``block_pattern``; params/caches are
+                  stacked with leading dim G and driven by ``jax.lax.scan``
+  tail blocks   — ``num_layers`` remainder, unrolled
+
+Every apply returns ``extras`` carrying routed-expert ids for MoE layers —
+the raw material for the paper's activation traces.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shardctx
+from repro.models import attention as attn
+from repro.models import mla, moe, rglru, ssd
+from repro.models.common import (dense_init, dtype_of, ffn_apply, ffn_init,
+                                 rms_norm, rms_norm_init)
+
+Params = Dict[str, Any]
+
+
+def _layer_split(cfg):
+    n_head = cfg.moe.first_dense_layers if cfg.moe else 0
+    pat = len(cfg.block_pattern)
+    rem = cfg.num_layers - n_head
+    return n_head, rem // pat, rem % pat
+
+
+def _layer_is_moe(cfg, layer_idx: int) -> bool:
+    if cfg.moe is None:
+        return False
+    if cfg.layer_kinds()[layer_idx] == "ssd":
+        return False
+    return layer_idx >= cfg.moe.first_dense_layers
+
+
+# ---------------------------------------------------------------------------
+# Single block
+
+def block_init(key, cfg, kind: str, is_moe: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p: Params = {"ln1": rms_norm_init(cfg.d_model, dtype)}
+    if kind == "mla":
+        p["attn"] = mla.mla_init(ks[0], cfg, dtype)
+    elif kind in ("global", "local", "chunked"):
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = rglru.rglru_init(ks[0], cfg, dtype)
+    elif kind == "ssd":
+        p["ssd"] = ssd.ssd_init(ks[0], cfg, dtype)
+        return p                                     # mamba block: no FFN
+    p["ln2"] = rms_norm_init(cfg.d_model, dtype)
+    if is_moe:
+        p["moe"] = moe.moe_init(ks[1], cfg, dtype)
+    else:
+        dff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.d_ff_dense:
+            dff = cfg.moe.d_ff_dense
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, dff, dtype)
+    return p
+
+
+def block_cache_init(cfg, kind: str, batch: int, cache_len: int, dtype):
+    if kind == "mla":
+        return mla.mla_init_cache(cfg, batch, cache_len, dtype)
+    if kind in ("global", "local", "chunked"):
+        return attn.init_cache(cfg, kind, batch, cache_len, dtype)
+    if kind == "rglru":
+        return rglru.rglru_init_state(cfg, batch, dtype)
+    if kind == "ssd":
+        return ssd.ssd_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_apply(p, cfg, kind: str, x, positions, mode: str,
+                cache=None, pos=None, cache_len: int = 0):
+    """Returns (x, new_cache, extras)."""
+    extras: Params = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mla":
+        out, new_cache = mla.mla_apply(p["attn"], cfg, h, positions, mode,
+                                       cache, pos, cache_len)
+    elif kind in ("global", "local", "chunked"):
+        out, new_cache = attn.attn_apply(p["attn"], cfg, kind, h, positions,
+                                         mode, cache, pos, cache_len)
+    elif kind == "rglru":
+        if mode == "decode":
+            out, new_cache = rglru.rglru_step(p["rec"], cfg, h, cache)
+        elif mode == "prefill":
+            out, new_cache = rglru.rglru_apply_full(p["rec"], cfg, h,
+                                                    return_state=True)
+        else:
+            out, new_cache = rglru.rglru_apply_full(p["rec"], cfg, h), None
+    elif kind == "ssd":
+        if mode == "decode":
+            out, new_cache = ssd.ssd_step(p["ssd"], cfg, h, cache)
+        elif mode == "prefill":
+            out, new_cache = ssd.ssd_apply_full(p["ssd"], cfg, h,
+                                                return_state=True)
+        else:
+            out, new_cache = ssd.ssd_apply_full(p["ssd"], cfg, h), None
+        return x + out, new_cache, extras            # no FFN sub-block
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux, idx = moe.moe_apply(p["moe"], cfg, h,
+                                    decode=(mode == "decode"))
+        extras["moe_aux"] = aux
+        extras["experts"] = idx
+    else:
+        y = ffn_apply(p["ffn"], h, cfg.ffn_kind)
+    return x + y, new_cache, extras
+
+
+# ---------------------------------------------------------------------------
+# Full decoder stack
+
+def stack_init(key, cfg, dtype) -> Params:
+    kinds = cfg.layer_kinds()
+    n_head, n_groups, n_tail = _layer_split(cfg)
+    pat = len(cfg.block_pattern)
+    keys = jax.random.split(key, cfg.num_layers)
+
+    head = [block_init(keys[i], cfg, kinds[i], _layer_is_moe(cfg, i), dtype)
+            for i in range(n_head)]
+
+    scan_params = []
+    for j in range(pat):
+        per_group = []
+        for g in range(n_groups):
+            li = n_head + g * pat + j
+            per_group.append(block_init(keys[li], cfg, kinds[li],
+                                        _layer_is_moe(cfg, li), dtype))
+        scan_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                           if n_groups else {})
+
+    tail_base = n_head + n_groups * pat
+    tail = [block_init(keys[tail_base + i], cfg, kinds[tail_base + i],
+                       _layer_is_moe(cfg, tail_base + i), dtype)
+            for i in range(n_tail)]
+    return {"head": head, "scan": tuple(scan_params), "tail": tail}
+
+
+def stack_cache_init(cfg, batch: int, cache_len: int, dtype) -> Params:
+    kinds = cfg.layer_kinds()
+    n_head, n_groups, n_tail = _layer_split(cfg)
+    pat = len(cfg.block_pattern)
+
+    def mk(i):
+        return block_cache_init(cfg, kinds[i], batch, cache_len, dtype)
+
+    head = [mk(i) for i in range(n_head)]
+    scan = []
+    for j in range(pat):
+        per = [mk(n_head + g * pat + j) for g in range(n_groups)]
+        scan.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+                    if n_groups else {})
+    tail_base = n_head + n_groups * pat
+    tail = [mk(tail_base + i) for i in range(n_tail)]
+    return {"head": head, "scan": tuple(scan), "tail": tail}
+
+
+def stack_apply(params, cfg, x, positions, mode: str,
+                caches: Optional[Params] = None, pos=None, cache_len: int = 0):
+    """Run all layers. Returns (x, new_caches, extras_list).
+
+    extras_list: per-layer dicts for head/tail; for scanned groups the
+    entries are stacked with leading dim G (one entry per pattern position).
+    """
+    kinds = cfg.layer_kinds()
+    n_head, n_groups, n_tail = _layer_split(cfg)
+    pat = len(cfg.block_pattern)
+    use_cache = mode == "decode"        # prefill BUILDS caches, reads none
+    new_caches: Params = {"head": [], "scan": None, "tail": []}
+    extras_out = {"head": [], "scan": None, "tail": []}
+
+    for i in range(n_head):
+        c = caches["head"][i] if use_cache else None
+        x, nc, ex = block_apply(params["head"][i], cfg, kinds[i], x,
+                                positions, mode, c, pos, cache_len)
+        new_caches["head"].append(nc)
+        extras_out["head"].append(ex)
+
+    if n_groups:
+        scan_kinds = [kinds[n_head + j] for j in range(pat)]
+
+        def body(carry, xs):
+            xc = carry
+            pp, cc = xs
+            ncs, exs = [], []
+            for j in range(pat):
+                c = cc[j] if use_cache else None
+                xc, nc, ex = block_apply(pp[j], cfg, scan_kinds[j], xc,
+                                         positions, mode, c, pos, cache_len)
+                ncs.append(nc if nc is not None else {})
+                exs.append(ex)
+            xc = shardctx.constrain_act(xc)
+            return xc, (tuple(ncs), tuple(exs))
+
+        if mode == "full" and shardctx.current_remat():
+            body = jax.checkpoint(body, prevent_cse=False)
+        cc_in = caches["scan"] if use_cache else tuple({} for _ in range(pat))
+        x, (scan_caches, scan_extras) = jax.lax.scan(
+            body, x, (params["scan"], cc_in))
+        new_caches["scan"] = scan_caches
+        extras_out["scan"] = scan_extras
+    else:
+        new_caches["scan"] = tuple({} for _ in range(pat))
+        extras_out["scan"] = tuple({} for _ in range(pat))
+
+    tail_base = n_head + n_groups * pat
+    for i in range(n_tail):
+        c = caches["tail"][i] if use_cache else None
+        x, nc, ex = block_apply(params["tail"][i], cfg, kinds[tail_base + i],
+                                x, positions, mode, c, pos, cache_len)
+        new_caches["tail"].append(nc)
+        extras_out["tail"].append(ex)
+
+    if mode == "full":
+        new_caches = None
+    return x, new_caches, extras_out
+
+
+# ---------------------------------------------------------------------------
+# LM wrapper (embeddings + stack + head), incl. stubbed modality frontends
+
+def lm_init(key, cfg) -> Params:
+    dtype = dtype_of(cfg)
+    k_emb, k_stack, k_head, k_fe = jax.random.split(key, 4)
+    p: Params = {
+        "tok_emb": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "final_ln": rms_norm_init(cfg.d_model, dtype),
+        "stack": stack_init(k_stack, cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend is not None:
+        p["frontend_proj"] = dense_init(k_fe, cfg.frontend_dim, cfg.d_model,
+                                        dtype)
+    return p
+
+
+def embed(params, cfg, tokens, modality=None):
+    """tokens: (B, S_text) int32; modality: (B, S_m, frontend_dim) or None.
+
+    VLM early fusion: projected patch embeddings are prepended to the token
+    embeddings (the frontend itself is stubbed per the assignment).
+    """
+    x = jnp.take(params["tok_emb"], tokens, axis=0)
+    n_prefix = 0
+    if modality is not None and cfg.frontend == "vision":
+        m = jnp.einsum("bsf,fd->bsd", modality.astype(x.dtype),
+                       params["frontend_proj"])
+        x = jnp.concatenate([m, x], axis=1)
+        n_prefix = modality.shape[1]
+    return x, n_prefix
+
+
+def unembed(params, cfg, x):
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    w = params["tok_emb"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("btd,dv->btv", x, w).astype(jnp.float32)
+
+
+def lm_apply(params, cfg, tokens, modality=None, mode: str = "full",
+             caches=None, pos=None, cache_len: int = 0):
+    x, n_prefix = embed(params, cfg, tokens, modality)
+    b, t, _ = x.shape
+    if mode == "decode":
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x, new_caches, extras = stack_apply(params["stack"], cfg, x, positions,
+                                        mode, caches, pos, cache_len)
+    logits = unembed(params, cfg, x)
+    return logits, new_caches, extras, n_prefix
+
+
+def collect_moe_aux(cfg, extras) -> jnp.ndarray:
+    """Mean MoE load-balance loss across layers (0 if no MoE)."""
+    losses = []
+    for ex in extras["head"] + list(extras["tail"]):
+        if "moe_aux" in ex:
+            losses.append(ex["moe_aux"])
+    for ex in extras["scan"]:
+        if isinstance(ex, dict) and "moe_aux" in ex:
+            losses.append(jnp.mean(ex["moe_aux"]))
+    if not losses:
+        return jnp.zeros((), jnp.float32)
+    return jnp.mean(jnp.stack(losses))

@@ -1,0 +1,212 @@
+"""Batch-1 offloaded serving engine — the paper's deployment scenario as a
+real decode loop, not just a trace simulator.
+
+The decode step is executed layer-by-layer: attention halves are jitted
+device programs; before each MoE layer the policy's prediction for that
+layer is prefetched into the device slot buffer; the router then reveals the
+truth, misses are demand-fetched (stall accounted), and the expert FFN is
+computed *from the slot buffer* via the gather path (kernels/expert_ffn).
+With capacity == all experts the engine is bit-identical to the monolithic
+``model.decode_step`` — tests assert this.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import Policy
+from repro.core.tracing import moe_layer_ids
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import transformer as T
+from repro.models.common import ffn_apply, rms_norm
+from repro.serving.offload import HostExpertStore, make_offload_cache
+
+
+def unstack_layers(cfg, params) -> List[dict]:
+    """Per-layer params list from the scan-stacked pytree."""
+    st = params["stack"]
+    n_head, n_groups, n_tail = T._layer_split(cfg)
+    pat = len(cfg.block_pattern)
+    layers = list(st["head"])
+    for g in range(n_groups):
+        for j in range(pat):
+            layers.append(jax.tree.map(lambda x, g=g: x[g], st["scan"][j]))
+    layers.extend(st["tail"])
+    return layers
+
+
+@dataclass
+class EngineStats:
+    tokens: int = 0
+    hits: int = 0
+    misses: int = 0
+    fetch_bytes: int = 0
+    sim_stall_s: float = 0.0
+
+    @property
+    def hit_rate(self):
+        return self.hits / max(self.hits + self.misses, 1)
+
+
+class OffloadEngine:
+    def __init__(self, model, params, policy: Optional[Policy],
+                 capacity: int, eviction: str = "lru",
+                 host_bw: float = 100e9, expert_backend: str = "jnp"):
+        cfg = model.cfg
+        assert cfg.moe is not None, "offload engine needs an MoE backbone"
+        self.cfg = cfg
+        self.model = model
+        self.policy = policy
+        self.params = params
+        self.layers = unstack_layers(cfg, params)
+        self.kinds = cfg.layer_kinds()
+        self.moe_layers = moe_layer_ids(cfg)
+        self.moe_index = {li: i for i, li in enumerate(self.moe_layers)}
+        self.expert_backend = expert_backend
+
+        # host store gets the routed-expert weights; everything else stays
+        # in self.layers (device)
+        store_layers = [self.layers[li]["moe"] for li in self.moe_layers]
+        self.store = HostExpertStore(store_layers)
+        self.cache, self.slots = make_offload_cache(
+            self.store, capacity, eviction, host_bw)
+        self.stats = EngineStats()
+        self._build_fns()
+
+    # ------------------------------------------------------------------
+    def _build_fns(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def embed_fn(tok_emb, token):
+            return jnp.take(tok_emb, token, axis=0)
+
+        @partial(jax.jit, static_argnames=("kind",))
+        def attn_half(lp, x, cache, pos, kind):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+            if kind == "mla":
+                o, nc = mla_mod.mla_apply(lp["attn"], cfg, h, positions,
+                                          "decode", cache, pos)
+            else:
+                o, nc = attn_mod.attn_apply(lp["attn"], cfg, kind, h,
+                                            positions, "decode", cache, pos)
+            return x + o, nc
+
+        @jax.jit
+        def dense_ffn_half(lp, x):
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + ffn_apply(lp["ffn"], h, cfg.ffn_kind)
+
+        @jax.jit
+        def router_fn(lp, x):
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            w, idx, probs = moe_mod.route(lp["moe"], cfg, h)
+            return h, w, idx
+
+        @jax.jit
+        def expert_from_slots(x_norm, weights, wg, wu, wd, shared, x):
+            # x_norm: (1,1,D); wg/wu: (k,d,f); wd: (k,f,d); weights: (1,1,k)
+            from repro.kernels import ops
+            y = ops.expert_ffn(x_norm[0, 0], weights[0, 0], wg, wu, wd,
+                               backend=self.expert_backend)
+            out = x + y[None, None, :]
+            if shared is not None:
+                out = out + ffn_apply(shared, x_norm, "swiglu")
+            return out
+
+        @jax.jit
+        def unembed_fn(params, x):
+            logits = T.unembed(params, cfg, x)
+            return logits
+
+        self._embed = embed_fn
+        self._attn_half = attn_half
+        self._dense_ffn = dense_ffn_half
+        self._router = router_fn
+        self._expert = expert_from_slots
+        self._unembed = unembed_fn
+
+    # ------------------------------------------------------------------
+    def init_state(self, cache_len: int):
+        caches = T.stack_cache_init(self.cfg, 1, cache_len,
+                                    jnp.dtype(self.cfg.dtype))
+        per_layer = unstack_layers(
+            self.cfg, {"stack": {"head": caches["head"],
+                                 "scan": caches["scan"],
+                                 "tail": caches["tail"]}})
+        return {"pos": 0, "caches": per_layer}
+
+    def decode_token(self, state, token: int):
+        """One token through all layers; returns (logits, state, experts)."""
+        cfg = self.cfg
+        x = self._embed(self.params["tok_emb"],
+                        jnp.full((1, 1), token, jnp.int32))
+        pos = state["pos"]
+        experts_per_layer = []
+        for li in range(cfg.num_layers):
+            lp = self.layers[li]
+            kind = self.kinds[li]
+            x, state["caches"][li] = self._attn_half(
+                lp, x, state["caches"][li], pos, kind=kind)
+            if li in self.moe_index:
+                mi = self.moe_index[li]
+                # 1) prefetch what the policy predicts for THIS layer
+                if self.policy is not None:
+                    pred = self.policy.predict(pos, mi)
+                    self.cache.prefetch((mi, int(e)) for e in pred)
+                # 2) router reveals ground truth
+                h, w, idx = self._router(lp, x)
+                gt = np.unique(np.asarray(idx)[0, 0])
+                for e in gt:
+                    hit = self.cache.access((mi, int(e)))
+                    self.stats.hits += int(hit)
+                    self.stats.misses += int(not hit)
+                # 3) compute from the slot buffer (order matches idx)
+                keys = [(mi, int(e)) for e in np.asarray(idx)[0, 0]]
+                wg, wu, wd = self.slots.gather(keys)
+                x = self._expert(h, w.astype(x.dtype), wg, wu, wd,
+                                 lp["moe"].get("shared"), x)
+                if self.policy is not None:
+                    emb = np.asarray(self.params["tok_emb"][token],
+                                     np.float32)
+                    self.policy.observe(pos, mi, gt, emb)
+                experts_per_layer.append(gt)
+            else:
+                x = self._dense_ffn(lp, x)
+        logits = self._unembed(self.params, x)
+        state["pos"] = pos + 1
+        self.stats.tokens += 1
+        self.stats.fetch_bytes = self.slots.fetch_bytes
+        self.stats.sim_stall_s = self.slots.sim_fetch_s
+        return np.asarray(logits)[0, 0], state, experts_per_layer
+
+    def generate(self, prompt, max_new: int, cache_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        state = self.init_state(cache_len)
+        if self.policy is not None:
+            self.policy.begin_prompt(None)
+        rng = np.random.default_rng(seed)
+        out = list(prompt)
+        cur = prompt[0]
+        n_total = min(len(prompt) + max_new, cache_len)
+        generated = []
+        for t in range(n_total):
+            logits, state, _ = self.decode_token(state, int(cur))
+            if t + 1 < len(prompt):
+                cur = prompt[t + 1]
+            else:
+                if temperature <= 0:
+                    cur = int(np.argmax(logits))
+                else:
+                    p = np.exp((logits - logits.max()) / temperature)
+                    cur = int(rng.choice(len(p), p=p / p.sum()))
+                generated.append(cur)
+        return generated

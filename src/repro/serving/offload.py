@@ -1,0 +1,97 @@
+"""Expert offloading: host-resident expert store + device-resident slot
+buffer (the TPU adaptation of the paper's VRAM expert cache, DESIGN.md §4).
+
+HostExpertStore keeps every MoE layer's expert weights as host numpy arrays
+(= "host DRAM"). SlotBuffer is a fixed-capacity stack of expert weight slots
+living on device (= "HBM"); fetching an expert is a host->device
+``device_put`` into a slot. The control plane (which expert sits in which
+slot, eviction order, prefetch decisions) is core.cache.ExpertCache.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import ExpertCache
+
+Key = Tuple[int, int]  # (moe_layer_index, expert_id)
+
+
+class HostExpertStore:
+    """Expert FFN weights per MoE layer, host-side."""
+
+    def __init__(self, expert_params_per_layer):
+        """expert_params_per_layer: list (per MoE layer) of dicts with
+        w_gate/w_up/w_down of shape (E, d, f)/(E, d, f)/(E, f, d)."""
+        self.layers = [
+            {k: np.asarray(v) for k, v in lp.items()
+             if k in ("w_gate", "w_up", "w_down")}
+            for lp in expert_params_per_layer
+        ]
+        self.num_layers = len(self.layers)
+        self.num_experts = self.layers[0]["w_gate"].shape[0]
+        lp = self.layers[0]
+        self.bytes_per_expert = sum(
+            lp[k][0].nbytes for k in ("w_gate", "w_up", "w_down"))
+
+    def get(self, key: Key):
+        layer, e = key
+        lp = self.layers[layer]
+        return (lp["w_gate"][e], lp["w_up"][e], lp["w_down"][e])
+
+
+class SlotBuffer:
+    """Fixed-capacity device buffer of expert slots + host slot table."""
+
+    def __init__(self, store: HostExpertStore, n_slots: int,
+                 host_bw: float = 100e9):
+        lp = store.layers[0]
+        e, d, f = lp["w_gate"].shape
+        self.store = store
+        self.n_slots = n_slots
+        self.host_bw = host_bw
+        self.w_gate = jnp.zeros((n_slots, d, f), lp["w_gate"].dtype)
+        self.w_up = jnp.zeros((n_slots, d, f), lp["w_up"].dtype)
+        self.w_down = jnp.zeros((n_slots, f, d), lp["w_down"].dtype)
+        self.slot_of: Dict[Key, int] = {}
+        self._free = list(range(n_slots))
+        self.fetch_bytes = 0
+        self.fetch_count = 0
+        self.sim_fetch_s = 0.0
+
+    # --- control-plane callbacks wired into ExpertCache -------------------
+    def release(self, key: Key) -> None:
+        slot = self.slot_of.pop(key)
+        self._free.append(slot)
+
+    def fill(self, key: Key) -> None:
+        slot = self._free.pop()
+        self.slot_of[key] = slot
+        wg, wu, wd = self.store.get(key)
+        self.w_gate = self.w_gate.at[slot].set(jnp.asarray(wg))
+        self.w_up = self.w_up.at[slot].set(jnp.asarray(wu))
+        self.w_down = self.w_down.at[slot].set(jnp.asarray(wd))
+        nbytes = wg.nbytes + wu.nbytes + wd.nbytes
+        self.fetch_bytes += nbytes
+        self.fetch_count += 1
+        self.sim_fetch_s += nbytes / self.host_bw
+
+    def gather(self, keys) -> tuple:
+        """Return (k, ...) stacked expert weights for resident keys."""
+        slots = jnp.asarray([self.slot_of[k] for k in keys], jnp.int32)
+        return (jnp.take(self.w_gate, slots, 0),
+                jnp.take(self.w_up, slots, 0),
+                jnp.take(self.w_down, slots, 0))
+
+
+def make_offload_cache(store: HostExpertStore, capacity: int,
+                       eviction: str = "lru", host_bw: float = 100e9):
+    """(ExpertCache, SlotBuffer) wired together."""
+    buf = SlotBuffer(store, capacity, host_bw)
+    cache = ExpertCache(capacity, eviction, on_evict=buf.release,
+                        on_insert=buf.fill)
+    return cache, buf

@@ -1,0 +1,3 @@
+from repro.training.optimizer import (  # noqa: F401
+    DynamicLossScaler, clip_by_global_norm, cosine_schedule, global_norm,
+    make_adamw)

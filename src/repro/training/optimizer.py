@@ -1,0 +1,138 @@
+"""AdamW with per-parameter-group learning rates, global-norm clipping and an
+optional dynamic loss scaler (optax is not available offline).
+
+The paper's predictor trains with AdamW(β1=.9, β2=.98, wd=.01), layerwise LRs
+(input_proj 1e-4, encoder 0.9e-4, head 0.8e-4) and clip 1.0 — expressed here
+as an ``lr_fn(path) -> lr`` over parameter paths.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def make_adamw(lr: float | Callable[[str], float] = 1e-4,
+               b1: float = 0.9, b2: float = 0.98, eps: float = 1e-8,
+               weight_decay: float = 0.01, clip: float = 1.0,
+               schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None):
+    """Returns (init_fn, update_fn).
+
+    ``lr`` is either a float or a function mapping a "/"-joined param path to
+    that parameter's learning rate (the paper's layerwise groups).
+    update_fn(grads, state, params) -> (new_params, new_state, stats)
+    """
+    lr_fn = lr if callable(lr) else (lambda _p: lr)
+
+    def init_fn(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update_fn(grads, state, params):
+        if clip:
+            grads, gnorm = clip_by_global_norm(grads, clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        sched = schedule(step) if schedule is not None else 1.0
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+        flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+        flat_mu = jax.tree.leaves(state["mu"])
+        flat_nu = jax.tree.leaves(state["nu"])
+
+        new_p, new_mu, new_nu = [], [], []
+        for (path, p), (_, g), mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+            gf = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * gf
+            nu = b2 * nu + (1 - b2) * gf * gf
+            mhat = mu / bc1
+            nhat = nu / bc2
+            lr_p = lr_fn(_path_str(path)) * sched
+            upd = mhat / (jnp.sqrt(nhat) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr_p * upd).astype(p.dtype))
+            new_mu.append(mu)
+            new_nu.append(nu)
+
+        unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+        return (unflat(new_p),
+                {"mu": unflat(new_mu), "nu": unflat(new_nu), "step": step},
+                {"grad_norm": gnorm})
+
+    return init_fn, update_fn
+
+
+def cosine_schedule(base: float = 1.0, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base * warm * cos
+    return fn
+
+
+class DynamicLossScaler:
+    """fp16-style loss scaling (paper's AMP GradScaler). Identity for bf16 —
+    kept for fidelity; see DESIGN.md §4."""
+
+    def __init__(self, init_scale: float = 2.0 ** 15, growth_interval: int = 2000,
+                 enabled: bool = False):
+        self.scale = init_scale if enabled else 1.0
+        self.growth_interval = growth_interval
+        self.enabled = enabled
+        self._good_steps = 0
+
+    def scale_loss(self, loss):
+        return loss * self.scale
+
+    def unscale_and_check(self, grads):
+        grads = jax.tree.map(lambda g: g / self.scale, grads)
+        finite = jnp.all(jnp.array(
+            [jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]))
+        return grads, finite
+
+    def update(self, finite: bool):
+        if not self.enabled:
+            return
+        if finite:
+            self._good_steps += 1
+            if self._good_steps >= self.growth_interval:
+                self.scale *= 2.0
+                self._good_steps = 0
+        else:
+            self.scale = max(self.scale / 2.0, 1.0)
+            self._good_steps = 0

@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and benches
+# must see the single real CPU device. The multi-device dry-run test shells
+# out to repro.launch.dryrun in a subprocess, which sets its own flags.
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,64 @@
+"""Shared test fixtures: a tiny trained MoE backbone + traces (session-cached
+so the expensive pipeline runs once)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.tracing import collect_traces
+from repro.data import make_topic_corpus, sample_prompts
+from repro.models import build_model
+from repro.training.optimizer import make_adamw
+
+
+def make_batch(cfg, batch=2, seq=64, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.frontend_len, cfg.frontend_dim)),
+            jnp.float32)
+    if cfg.frontend == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.frontend_len, cfg.frontend_dim)),
+            jnp.float32)
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def tiny_backbone(steps: int = 60):
+    """Train the reduced DeepSeek-V2-Lite backbone briefly; return
+    (cfg, model, params, corpus)."""
+    cfg = get_reduced("deepseek-v2-lite")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = make_topic_corpus(cfg.vocab_size, n_topics=4, seed=0)
+    oi, ou = make_adamw(lr=3e-3, clip=1.0)
+    ost = oi(params)
+
+    from repro.data import lm_batches
+
+    @jax.jit
+    def step(params, ost, tokens):
+        def lf(p):
+            return model.loss_fn(p, {"tokens": tokens})
+        (l, m), g = jax.value_and_grad(lf, has_aux=True)(params)
+        params, ost, _ = ou(g, ost, params)
+        return params, ost, l
+
+    for tokens in lm_batches(corpus, 16, 64, steps, seed=1):
+        params, ost, _ = step(params, ost, jnp.asarray(tokens[:, :64]))
+    return cfg, model, params, corpus
+
+
+@functools.lru_cache(maxsize=1)
+def tiny_traces(n: int = 10):
+    cfg, model, params, corpus = tiny_backbone()
+    prompts = sample_prompts(corpus, n, 12, seed=2)
+    traces = collect_traces(model, params, prompts, max_new=36, cache_len=64)
+    return cfg, model, params, traces

@@ -1,0 +1,146 @@
+"""Unit tests for the paper's core: EAM/EAMC, cache, metrics, simulator."""
+import numpy as np
+import pytest
+
+from repro.core.cache import ExpertCache
+from repro.core.eam import EAMC, REAMBuilder, build_ream, kmeans
+from repro.core.metrics import (elementwise_accuracy, exact_set_accuracy,
+                                macro_f1, select_experts)
+from repro.core.policies import NoPrefetchPolicy, OraclePolicy
+from repro.core.simulator import SimConfig, simulate
+from repro.core.tracing import Trace
+
+
+def make_trace(t=20, layers=3, k=2, e=8, seed=0, emb=4):
+    rng = np.random.default_rng(seed)
+    return Trace(
+        tokens=rng.integers(0, 100, t).astype(np.int32),
+        embeddings=rng.normal(size=(t, emb)).astype(np.float32),
+        experts=rng.integers(0, e, (t, layers, k)).astype(np.int32),
+        prompt_len=4,
+    )
+
+
+# --------------------------------------------------------------- EAM / EAMC
+def test_ream_builder():
+    b = REAMBuilder(3, 8)
+    b.add(0, [1, 2])
+    b.add(0, [2])
+    b.add(2, [7])
+    assert b.counts[0, 2] == 2 and b.counts[0, 1] == 1
+    assert b.counts[2, 7] == 1
+    assert abs(np.linalg.norm(b.flat()) - 1) < 1e-9
+
+
+def test_build_ream_counts():
+    tr = make_trace(t=10, layers=2, k=3, e=5)
+    r = build_ream(tr, 2, 5)
+    assert r.sum() == 10 * 2 * 3
+    r4 = build_ream(tr, 2, 5, upto_token=4)
+    assert r4.sum() == 4 * 2 * 3
+
+
+def test_kmeans_separates_clusters():
+    rng = np.random.default_rng(0)
+    a = rng.normal(loc=5, size=(20, 6))
+    b = rng.normal(loc=-5, size=(20, 6))
+    x = np.concatenate([a, b])
+    cents, assign = kmeans(x, 2, seed=1)
+    assert len(set(assign[:20])) == 1
+    assert len(set(assign[20:])) == 1
+    assert assign[0] != assign[20]
+
+
+def test_eamc_match_returns_nearest():
+    reams = [np.zeros((2, 4)), np.zeros((2, 4))]
+    reams[0][0, 0] = 10.0
+    reams[1][1, 3] = 10.0
+    c = EAMC(2, 4, capacity=8)
+    c.fit(reams)
+    q = np.zeros((2, 4))
+    q[0, 0] = 3.0
+    m = c.match(q)
+    assert m[0, 0] > 0 and m[1, 3] == 0
+    pred = c.predict_layer(q, 0, width=2)
+    assert 0 in pred
+
+
+# --------------------------------------------------------------------- cache
+def test_lru_eviction_order():
+    c = ExpertCache(2, "lru")
+    c.access("a")
+    c.access("b")
+    c.access("a")      # refresh a
+    c.access("c")      # evicts b
+    assert "a" in c and "c" in c and "b" not in c
+
+
+def test_lfu_eviction():
+    c = ExpertCache(2, "lfu")
+    for _ in range(3):
+        c.access("hot")
+    c.access("cold1")
+    c.access("cold2")  # evicts cold1 (freq 1 < hot 3)
+    assert "hot" in c and "cold2" in c and "cold1" not in c
+
+
+def test_prefetch_counts():
+    c = ExpertCache(4, "lru")
+    c.prefetch(["a", "b"])
+    assert c.stats.prefetches == 2 and c.stats.accesses == 0
+    assert c.access("a") and c.stats.prefetch_hits == 1
+    assert not c.access("z")
+    assert c.stats.demand_fetches == 1
+
+
+# ------------------------------------------------------------------- metrics
+def test_select_experts_topk_threshold():
+    logits = np.array([[4.0, 3.0, -5.0, 0.2, -0.2]])
+    sel = select_experts(logits, top_k=3, threshold=0.5)
+    # top-3 by prob = {0,1,3}; 3 has sigmoid(0.2)=.55>.5 -> kept
+    assert sel[0].tolist() == [True, True, False, True, False]
+    sel2 = select_experts(logits, top_k=1, threshold=0.5)
+    assert sel2[0].tolist() == [True, False, False, False, False]
+
+
+def test_metrics_perfect_and_disjoint():
+    true = np.zeros((4, 6), bool)
+    true[:, 0] = True
+    assert elementwise_accuracy(true, true) == 1.0
+    assert exact_set_accuracy(true, true) == 1.0
+    assert macro_f1(true, true) == pytest.approx(1.0 / 6)  # only expert 0 has support
+    pred = np.zeros_like(true)
+    pred[:, 1] = True
+    assert exact_set_accuracy(pred, true) == 0.0
+    assert elementwise_accuracy(pred, true) == pytest.approx(4 / 6)
+
+
+# ----------------------------------------------------------------- simulator
+def test_oracle_beats_noprefetch_and_hits_100():
+    traces = [make_trace(seed=s) for s in range(3)]
+    sim = SimConfig(num_layers=3, num_experts=8, capacity_fraction=0.5,
+                    warm_tokens=2)
+    r_oracle = simulate(traces, OraclePolicy(), sim)
+    r_none = simulate(traces, NoPrefetchPolicy(), sim)
+    assert r_oracle.cache_hit_rate == pytest.approx(1.0)
+    assert r_oracle.prediction_hit_rate == pytest.approx(1.0)
+    assert r_none.cache_hit_rate < 1.0
+    assert r_oracle.cache_hit_rate >= r_none.cache_hit_rate
+
+
+def test_simulator_full_capacity_all_hits_after_warm():
+    """With capacity = everything, misses only happen on first-ever use."""
+    tr = make_trace(t=30, layers=2, k=2, e=4, seed=1)
+    sim = SimConfig(num_layers=2, num_experts=4, capacity_fraction=1.0,
+                    warm_tokens=10)
+    r = simulate([tr], NoPrefetchPolicy(), sim)
+    # after 10 warm tokens every (layer, expert) pair has been touched with
+    # high probability; allow the rare cold pair
+    assert r.cache_hit_rate > 0.9
+
+
+def test_simulator_counts_tokens():
+    tr = make_trace(t=25)
+    sim = SimConfig(num_layers=3, num_experts=8, capacity_fraction=0.2)
+    r = simulate([tr], NoPrefetchPolicy(), sim)
+    assert r.tokens == 25

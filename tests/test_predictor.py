@@ -1,0 +1,124 @@
+"""Predictor model + training: shapes, causality, overfit capacity, early
+stopping, dataset mechanics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PredictorConfig
+from repro.core.predictor import (bce_loss, predictor_apply, predictor_init)
+from repro.core.tracing import Trace
+from repro.data.traces import PredictorDataset, SequenceCache
+
+PC = PredictorConfig(token_emb_dim=16, num_model_layers=4, num_experts=8,
+                     layer_emb_dim=8, d_model=32, num_layers=2, num_heads=4,
+                     d_ff=64, max_seq=24, top_k=2)
+
+
+def _toy_traces(n=6, t=20, seed=0):
+    rng = np.random.default_rng(seed)
+    traces = []
+    for i in range(n):
+        toks = rng.integers(0, 50, t).astype(np.int32)
+        emb = np.zeros((t, PC.token_emb_dim), np.float32)
+        emb[np.arange(t), toks % PC.token_emb_dim] = 1.0   # learnable signal
+        # deterministic rule: expert = (token + layer) % E, plus expert 0
+        experts = np.zeros((t, 4, 2), np.int32)
+        for l in range(4):
+            experts[:, l, 0] = (toks + l) % PC.num_experts
+            experts[:, l, 1] = 0
+        traces.append(Trace(toks, emb, experts, prompt_len=4))
+    return traces
+
+
+def test_predictor_shapes_and_finite():
+    params = predictor_init(jax.random.PRNGKey(0), PC)
+    emb = jnp.zeros((2, 10, PC.token_emb_dim))
+    lids = jnp.zeros((2, 10), jnp.int32)
+    mask = jnp.ones((2, 10), bool)
+    logits = predictor_apply(params, PC, emb, lids, mask)
+    assert logits.shape == (2, 10, PC.num_experts)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_predictor_is_causal():
+    """Changing a future token must not change past predictions."""
+    params = predictor_init(jax.random.PRNGKey(0), PC)
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(1, 12, PC.token_emb_dim)).astype(np.float32)
+    lids = jnp.zeros((1, 12), jnp.int32)
+    mask = jnp.ones((1, 12), bool)
+    l1 = predictor_apply(params, PC, jnp.asarray(emb), lids, mask)
+    emb2 = emb.copy()
+    emb2[0, 8:] += 10.0
+    l2 = predictor_apply(params, PC, jnp.asarray(emb2), lids, mask)
+    np.testing.assert_allclose(np.asarray(l1)[0, :8], np.asarray(l2)[0, :8],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(l1)[0, 8:], np.asarray(l2)[0, 8:])
+
+
+def test_predictor_overfits_rule():
+    """On a deterministic routing rule the predictor should reach high F1
+    quickly — this is the learning-capacity sanity check."""
+    from repro.core.predictor_train import train_predictor
+    traces = _toy_traces(n=8)
+    params, hist = train_predictor(traces[:6], traces[6:], PC, epochs=28,
+                                   batch_size=4, base_lr=1e-2, patience=28,
+                                   log=lambda *_: None)
+    assert max(hist.val_f1) > 0.85, hist.val_f1
+    assert max(hist.val_acc) > 0.95, hist.val_acc
+
+
+def test_early_stopping_triggers():
+    from repro.core.predictor_train import train_predictor
+    traces = _toy_traces(n=4)
+    # zero LR -> no improvement -> early stop after `patience` epochs
+    params, hist = train_predictor(traces[:3], traces[3:], PC, epochs=10,
+                                   batch_size=2, base_lr=0.0, patience=2,
+                                   log=lambda *_: None)
+    assert len(hist.val_loss) < 10
+
+
+def test_bce_loss_masking():
+    logits = jnp.zeros((1, 4, 8))
+    tgt = jnp.zeros((1, 4, 8))
+    mask_all = jnp.ones((1, 4))
+    mask_none = jnp.zeros((1, 4))
+    l1 = bce_loss(logits, tgt, mask_all)
+    assert abs(float(l1) - float(np.log(2))) < 1e-5
+    assert float(bce_loss(logits, tgt, mask_none)) == 0.0
+
+
+def test_dataset_padding_and_targets():
+    traces = _toy_traces(n=2, t=10)
+    ds = PredictorDataset(traces, PC)
+    assert len(ds) == 2 * 4                     # (trace, layer) pairs
+    emb, lids, mask, tgt = ds.example(0)
+    assert emb.shape == (PC.max_seq, PC.token_emb_dim)
+    assert mask[:10].all() and not mask[10:].any()
+    # targets: exactly the rule's experts are hot
+    t0 = traces[0]
+    for tok in range(10):
+        hot = set(np.nonzero(tgt[tok])[0].tolist())
+        assert hot == set(t0.experts[tok, 0].tolist())
+    # padded positions have empty targets
+    assert tgt[10:].sum() == 0
+
+
+def test_sequence_cache_lru():
+    c = SequenceCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1
+    c.put("c", 3)                               # evicts b (LRU)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+
+
+def test_dataset_cache_accelerates_epochs():
+    traces = _toy_traces(n=2, t=10)
+    ds = PredictorDataset(traces, PC, cache_capacity=1000)
+    list(ds.batches(2, shuffle=False))
+    m0 = ds.cache.misses
+    list(ds.batches(2, shuffle=False))
+    assert ds.cache.misses == m0               # all hits on second epoch
+    assert ds.cache.hits >= len(ds)

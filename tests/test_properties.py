@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import ExpertCache
+from repro.core.eam import kmeans
+from repro.core.metrics import select_experts
+from repro.kernels import ref
+
+import jax.numpy as jnp
+
+keys = st.integers(min_value=0, max_value=30)
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["access", "prefetch"]), keys),
+    min_size=1, max_size=200)
+
+
+@given(capacity=st.integers(1, 16), ops=ops_strategy,
+       policy=st.sampled_from(["lru", "lfu"]))
+@settings(max_examples=60, deadline=None)
+def test_cache_invariants(capacity, ops, policy):
+    c = ExpertCache(capacity, policy)
+    for op, k in ops:
+        if op == "access":
+            c.access(k)
+        else:
+            c.prefetch([k])
+    # capacity never exceeded
+    assert len(c) <= capacity
+    # accounting identities
+    assert c.stats.hits + c.stats.misses == \
+        sum(1 for op, _ in ops if op == "access")
+    assert c.stats.demand_fetches == c.stats.misses
+    # any just-accessed key must be resident (it is inserted on miss)
+    if ops and ops[-1][0] == "access":
+        assert ops[-1][1] in c
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_lru_keeps_most_recent(data):
+    capacity = data.draw(st.integers(2, 8))
+    n_ops = data.draw(st.integers(capacity, 50))
+    c = ExpertCache(capacity, "lru")
+    seq = [data.draw(keys) for _ in range(n_ops)]
+    for k in seq:
+        c.access(k)
+    # the `capacity` most recent *distinct* keys are exactly the residents
+    recent = []
+    for k in reversed(seq):
+        if k not in recent:
+            recent.append(k)
+        if len(recent) == capacity:
+            break
+    for k in recent:
+        assert k in c
+
+
+@given(t=st.integers(1, 40), e=st.integers(2, 64),
+       k=st.integers(1, 8), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_topk_gating_properties(t, e, k, seed):
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(t, e)), jnp.float32)
+    w, idx = ref.topk_gating_ref(logits, k)
+    w, idx = np.asarray(w), np.asarray(idx)
+    # weights are a distribution over the selected experts
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    assert (w >= 0).all()
+    # indices are unique per row and within range
+    for row in range(t):
+        assert len(set(idx[row].tolist())) == k
+        assert (idx[row] >= 0).all() and (idx[row] < e).all()
+    # selected experts really are the k largest logits
+    for row in range(t):
+        top = set(np.argsort(-np.asarray(logits)[row])[:k].tolist())
+        assert set(idx[row].tolist()) == top
+
+
+@given(t=st.integers(1, 20), e=st.integers(2, 32), k=st.integers(1, 8),
+       seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_select_experts_cardinality(t, e, k, seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(t, e)) * 3
+    sel = select_experts(logits, top_k=k, threshold=0.5)
+    # never more than k experts selected; all selected have prob > .5
+    assert (sel.sum(-1) <= min(k, e)).all()
+    probs = 1 / (1 + np.exp(-logits))
+    assert ((probs > 0.5) | ~sel).all()
+
+
+@given(n=st.integers(4, 40), d=st.integers(2, 10), k=st.integers(1, 6),
+       seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_kmeans_properties(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)) + 0.1
+    cents, assign = kmeans(x, k, seed=seed)
+    k_eff = min(k, n)
+    assert cents.shape == (k_eff, d)
+    assert assign.shape == (n,)
+    assert (assign >= 0).all() and (assign < k_eff).all()
+    # centroids are unit-normalised (cosine k-means)
+    norms = np.linalg.norm(cents, axis=1)
+    np.testing.assert_allclose(norms[norms > 1e-9], 1.0, atol=1e-6)
+
+
+@given(seed=st.integers(0, 500), cap_frac=st.floats(0.1, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_oracle_dominates_random(seed, cap_frac):
+    """Oracle prefetch must never lose to random prefetch."""
+    from repro.core.policies import OraclePolicy, RandomPolicy
+    from repro.core.simulator import SimConfig, simulate
+    from test_core import make_trace
+    traces = [make_trace(t=15, layers=2, k=2, e=8, seed=seed + i)
+              for i in range(2)]
+    sim = SimConfig(num_layers=2, num_experts=8,
+                    capacity_fraction=cap_frac, warm_tokens=3)
+    r_o = simulate(traces, OraclePolicy(), sim)
+    r_r = simulate(traces, RandomPolicy(8, 2, seed), sim)
+    assert r_o.cache_hit_rate >= r_r.cache_hit_rate - 1e-9
+    assert r_o.prediction_hit_rate == 1.0
