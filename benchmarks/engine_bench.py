@@ -1,8 +1,59 @@
 """Beyond-paper: the integrated offload serving engine (real decode, real
-slot buffer) under each prefetch policy — hit rates + modeled stall."""
+slot buffer) under each prefetch policy — hit rates + modeled stall — plus
+batched-vs-sequential decode throughput for the continuous-batching engine.
+
+CI smoke mode (no cached artifacts, tiny backbone, JSON artifact):
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny \
+      --out artifacts/engine_bench.json
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import time
+
 import numpy as np
+
+
+def _throughput(model, params, cfg, prompts, max_new: int, cache_len: int,
+                batch: int, log=print):
+    """tokens/s: one batched engine at ``batch`` vs the same requests run
+    sequentially through one batch-1 engine. Both are warmed first so jit
+    compilation stays out of the timed region."""
+    from repro.core.tracing import moe_layer_ids
+    from repro.serving.engine import OffloadEngine
+    from repro.serving.scheduler import BatchedOffloadEngine
+
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+
+    seq = OffloadEngine(model, params, None, n_total)
+    seq.generate(prompts[0], max_new=2, cache_len=cache_len)      # warm
+    tok0 = seq.stats.tokens
+    t0 = time.perf_counter()
+    for p in prompts:
+        seq.generate(p, max_new=max_new, cache_len=cache_len)
+    seq_s = time.perf_counter() - t0
+    seq_tokens = seq.stats.tokens - tok0
+
+    bat = BatchedOffloadEngine(model, params, None, n_total,
+                               max_batch=batch)
+    bat.generate(prompts, max_new=2, cache_len=cache_len)         # warm
+    tok0 = bat.stats.tokens
+    t0 = time.perf_counter()
+    bat.generate(prompts, max_new=max_new, cache_len=cache_len)
+    bat_s = time.perf_counter() - t0
+    bat_tokens = bat.stats.tokens - tok0
+
+    seq_tps = seq_tokens / max(seq_s, 1e-9)
+    bat_tps = bat_tokens / max(bat_s, 1e-9)
+    log(f"  throughput: sequential {seq_tps:.1f} tok/s, "
+        f"batch={batch} {bat_tps:.1f} tok/s "
+        f"({bat_tps / max(seq_tps, 1e-9):.2f}x, "
+        f"mean batch {bat.stats.mean_batch:.2f})")
+    return {"seq_tok_s": seq_tps, "batched_tok_s": bat_tps,
+            "speedup": bat_tps / max(seq_tps, 1e-9),
+            "mean_batch": bat.stats.mean_batch}
 
 
 def run(log=print):
@@ -29,12 +80,95 @@ def run(log=print):
         "moe-beyond-online": OnlineMoEBeyondPolicy(pp, pcfg, width=6),
     }
     out = {}
-    log("  policy,cache_hit,fetch_MiB,stall_ms_total (engine, capacity 20%)")
+    log("  policy,cache_hit,fetch_MiB,stall_ms,blocking_ms "
+        "(engine, capacity 20%, layer_compute 50us)")
     for name, pol in policies.items():
-        eng = OffloadEngine(model, params, pol, capacity)
+        eng = OffloadEngine(model, params, pol, capacity,
+                            layer_compute_s=50e-6)
         eng.generate(prompt, max_new=36, cache_len=64)
         s = eng.stats
         log(f"  {name},{s.hit_rate:.3f},{s.fetch_bytes / 2**20:.1f},"
-            f"{s.sim_stall_s * 1e3:.1f}")
+            f"{s.sim_stall_s * 1e3:.1f},{s.blocking_stall_s * 1e3:.1f}")
         out[f"engine_{name}_hit"] = s.hit_rate
+        out[f"engine_{name}_stall_ms"] = s.sim_stall_s * 1e3
+
+    prompts = sample_prompts(corpus, 4, 12, seed=6)
+    tp = _throughput(model, params, cfg, prompts, max_new=24, cache_len=64,
+                     batch=4, log=log)
+    out.update({f"batched_{k}": v for k, v in tp.items()})
     return out
+
+
+def run_tiny(out_path=None, log=print):
+    """CI smoke: briefly-trained reduced backbone, no cached artifacts;
+    writes the JSON artifact the workflow uploads."""
+    from repro.configs import get_reduced
+    from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
+    from repro.core.tracing import moe_layer_ids
+    from repro.data import make_topic_corpus, sample_prompts
+    from repro.launch.train import train
+    from repro.models import build_model
+    from repro.serving.engine import OffloadEngine
+
+    t0 = time.time()
+    arch = "deepseek-v2-lite"
+    params, _ = train(arch, reduced=True, steps=30, batch_size=8,
+                      seq_len=64, lr=3e-3, log=log)
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    corpus = make_topic_corpus(cfg.vocab_size, n_topics=4, seed=0)
+    prompts = sample_prompts(corpus, 4, 8, seed=1)
+    n_moe = len(moe_layer_ids(cfg))
+    e = cfg.moe.num_experts
+
+    results = _throughput(model, params, cfg, prompts, max_new=12,
+                          cache_len=32, batch=4, log=log)
+
+    cap = max(model.cfg.moe.top_k * 4 + 1, (n_moe * e) // 4)
+    eng = OffloadEngine(model, params, NoPrefetchPolicy(), cap,
+                        layer_compute_s=50e-6)
+    eng.generate(prompts[0], max_new=12, cache_len=32)
+    s = eng.stats
+    # prefetch-ahead engine: transfers hide behind modeled compute
+    pre = OffloadEngine(model, params, NextLayerAllPolicy(e), cap,
+                        layer_compute_s=50e-6)
+    pre.generate(prompts[0], max_new=12, cache_len=32)
+    results.update({
+        "hit_rate_small_cache": s.hit_rate,
+        "stall_ms": s.sim_stall_s * 1e3,
+        "blocking_stall_ms": s.blocking_stall_s * 1e3,
+        "prefetch_hit_rate": pre.stats.hit_rate,
+        "prefetch_stall_ms": pre.stats.sim_stall_s * 1e3,
+        "prefetch_blocking_stall_ms": pre.stats.blocking_stall_s * 1e3,
+        "prefetch_overlapped_ms": pre.stats.overlapped_s * 1e3,
+        "wall_s": time.time() - t0,
+    })
+    log(f"  tiny bench: {json.dumps(results, indent=2)}")
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                    exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+        log(f"  wrote {out_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny backbone, no cached artifacts")
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    args = ap.parse_args()
+    if args.tiny:
+        run_tiny(args.out)
+    else:
+        results = run()
+        if args.out:
+            os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                        exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ class ExpertCache:
         self.on_insert = on_insert    # callback(key) -> None (slot fill)
         self._entries: OrderedDict[Hashable, bool] = OrderedDict()
         self._freq: dict[Hashable, int] = {}
+        self._pins: dict[Hashable, int] = {}   # key -> refcount
         self.stats = CacheStats()
 
     def __contains__(self, key) -> bool:
@@ -51,15 +52,38 @@ class ExpertCache:
     def reset(self) -> None:
         self._entries.clear()
         self._freq.clear()
+        self._pins.clear()
         self.stats = CacheStats()
 
+    # --- pinning: an expert in use by any in-flight request is not evictable
+    def pin(self, key) -> None:
+        """Refcounted eviction guard; the key must be resident."""
+        assert key in self._entries, f"pin of non-resident key {key!r}"
+        self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key) -> None:
+        n = self._pins.get(key, 0) - 1
+        if n <= 0:
+            self._pins.pop(key, None)
+        else:
+            self._pins[key] = n
+
+    def pinned(self, key) -> bool:
+        return self._pins.get(key, 0) > 0
+
     def _evict_one(self) -> None:
+        evictable = [k for k in self._entries if not self.pinned(k)]
+        if not evictable:
+            raise RuntimeError(
+                f"ExpertCache thrashing: all {len(self._entries)} resident "
+                f"experts are pinned by in-flight requests; capacity "
+                f"{self.capacity} is too small for the concurrent working set")
         if self.policy == "lru":
-            victim, _ = self._entries.popitem(last=False)
+            victim = evictable[0]            # OrderedDict order == LRU order
         else:  # lfu, LRU tie-break via OrderedDict order
-            victim = min(self._entries,
+            victim = min(evictable,
                          key=lambda k: (self._freq.get(k, 0),))
-            del self._entries[victim]
+        del self._entries[victim]
         if self.on_evict is not None:
             self.on_evict(victim)
         self.stats.evictions += 1

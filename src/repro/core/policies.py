@@ -24,6 +24,10 @@ from repro.core.eam import EAMC, REAMBuilder, build_ream
 class Policy:
     name = "base"
 
+    #: True when predict/observe keep no per-request state, so ONE instance
+    #: may be shared verbatim across in-flight requests of a batched engine.
+    stateless = False
+
     def begin_prompt(self, trace) -> None:  # noqa: ARG002
         pass
 
@@ -35,12 +39,30 @@ class Policy:
         """Experts to prefetch for (token t, layer)."""
         return np.empty((0,), np.int64)
 
+    # --- batched API (serving/scheduler.py) -------------------------------
+    # Defaults loop over the scalar interface; vectorised policies override.
+
+    def predict_batch(self, ts: Sequence[int], layer: int) -> List[np.ndarray]:
+        """Per-request prefetch sets for a batch of (token-step, layer)."""
+        return [self.predict(t, layer) for t in ts]
+
+    def observe_batch(self, ts: Sequence[int], layer: int,
+                      experts_per_req: Sequence[Sequence[int]],
+                      embeddings: Optional[Sequence] = None) -> None:
+        for i, t in enumerate(ts):
+            emb = embeddings[i] if embeddings is not None else None
+            self.observe(t, layer, experts_per_req[i], emb)
+
 
 class NoPrefetchPolicy(Policy):
     name = "lru-on-demand"
+    stateless = True
 
 
 class RandomPolicy(Policy):
+    # NOT stateless: predict() advances the shared rng, so per-request
+    # streams would depend on batch interleaving if one instance were
+    # shared — batched engines should build one per request.
     name = "random"
 
     def __init__(self, num_experts: int, width: int, seed: int = 0):
@@ -56,6 +78,7 @@ class RandomPolicy(Policy):
 class NextLayerAllPolicy(Policy):
     """DeepSpeed-MoE-style: prefetch the whole next layer (over-fetches)."""
     name = "next-layer-all"
+    stateless = True
 
     def __init__(self, num_experts: int):
         self.e = num_experts
@@ -67,6 +90,7 @@ class NextLayerAllPolicy(Policy):
 class GlobalFrequencyPolicy(Policy):
     """BrainStorm-style: retain historically popular experts per layer."""
     name = "global-frequency"
+    stateless = True
 
     def __init__(self, train_traces, num_layers: int, num_experts: int,
                  width: int):
@@ -249,3 +273,63 @@ class OnlineMoEBeyondPolicy(Policy):
             jnp.ones((1, n), bool)))[0, -1, : pc.num_experts]
         sel = select_experts(logits, self.width, threshold=-1e9)
         return np.nonzero(sel)[0]
+
+
+class PerRequestPolicy:
+    """Per-request policy state behind the batched predict/observe API.
+
+    The batched engine shares ONE ExpertCache across in-flight requests but
+    prediction state (rEAM sketches, observed embeddings, precomputed trace
+    predictions) is per request. ``factory()`` builds a fresh Policy for
+    every admitted request; a stateless policy instance may be passed
+    directly and is then shared across all requests.
+    """
+
+    def __init__(self, policy_or_factory, force_shared: bool = False):
+        """force_shared: accept a *stateful* instance as shared anyway —
+        only sound when at most one request is ever in flight (the batch-1
+        OffloadEngine)."""
+        if isinstance(policy_or_factory, Policy):
+            pol = policy_or_factory
+            if not (pol.stateless or force_shared):
+                raise ValueError(
+                    f"policy {pol.name!r} keeps per-request state; pass a "
+                    f"factory (e.g. lambda: {type(pol).__name__}(...)) so "
+                    "each request gets its own instance")
+            self._shared: Optional[Policy] = pol
+            self._factory = None
+        else:
+            self._shared = None
+            self._factory = policy_or_factory
+        self._per_req: Dict[int, Policy] = {}
+
+    def _get(self, rid: int) -> Policy:
+        if self._shared is not None:
+            return self._shared
+        return self._per_req[rid]
+
+    def begin_request(self, rid: int, trace=None) -> None:
+        if self._shared is None:
+            self._per_req[rid] = self._factory()
+            self._per_req[rid].begin_prompt(trace)
+        else:
+            self._shared.begin_prompt(trace)
+
+    def end_request(self, rid: int) -> None:
+        self._per_req.pop(rid, None)
+
+    def predict_batch(self, rids: Sequence[int], ts: Sequence[int],
+                      layer: int) -> List[np.ndarray]:
+        if self._shared is not None:   # shared policy: use its batched path
+            return self._shared.predict_batch(ts, layer)
+        return [self._get(r).predict(t, layer) for r, t in zip(rids, ts)]
+
+    def observe_batch(self, rids: Sequence[int], ts: Sequence[int],
+                      layer: int, experts_per_req, embeddings=None) -> None:
+        if self._shared is not None:
+            self._shared.observe_batch(ts, layer, experts_per_req,
+                                       embeddings)
+            return
+        for i, (r, t) in enumerate(zip(rids, ts)):
+            emb = embeddings[i] if embeddings is not None else None
+            self._get(r).observe(t, layer, experts_per_req[i], emb)

@@ -178,7 +178,11 @@ def _parse(text: str):
             continue
         if re.search(r"\bdot\(", rest):
             res_elems = sum(_elems(d) for _, d in _shapes_in(rt))
-            lhs = rest.split("dot(")[1].split(",")[0].strip()
+            # lhs operand ref: first %name inside the parens (the operand's
+            # own type string contains commas, so naive comma-splitting
+            # truncates mid-shape and loses the contracting-dim factor)
+            lhs_refs = re.findall(r"%[\w.\-]+", rest.split("dot(", 1)[1])
+            lhs = lhs_refs[0] if lhs_refs else ""
             k = 1
             lc = _LHS_C.search(rest)
             if lc and lhs in result_shape:

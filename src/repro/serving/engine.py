@@ -1,32 +1,42 @@
-"""Batch-1 offloaded serving engine — the paper's deployment scenario as a
-real decode loop, not just a trace simulator.
+"""Offloaded serving engines — the paper's deployment scenario as a real
+decode loop, not just a trace simulator.
 
-The decode step is executed layer-by-layer: attention halves are jitted
-device programs; before each MoE layer the policy's prediction for that
-layer is prefetched into the device slot buffer; the router then reveals the
-truth, misses are demand-fetched (stall accounted), and the expert FFN is
-computed *from the slot buffer* via the gather path (kernels/expert_ffn).
-With capacity == all experts the engine is bit-identical to the monolithic
-``model.decode_step`` — tests assert this.
+The decode step is executed layer-by-layer: attention halves are jitted,
+*batched* device programs (per-request KV-cache rows gathered/scattered
+around a vmapped single-row core, compiled once per padding bucket); the
+policy's prediction for MoE layer i+1 is submitted to the host->device
+channel before layer i's attention runs, so prefetch transfers overlap
+compute (offload.OverlapTracker charges only the un-overlapped remainder
+as stall). At each MoE layer the router reveals the truth, misses are
+demand-fetched, every expert needed by any in-flight request is *pinned*
+in the ExpertCache for the duration of the expert compute, and the expert
+FFN runs from the slot buffer via the gather path (kernels/expert_ffn).
+
+``OffloadEngine`` keeps the original batch-1 API on top of the shared
+``DecodeCore``; ``serving/scheduler.py`` builds the multi-request
+continuous-batching engine on the same core. With capacity == all experts
+both are bit-identical to the monolithic ``model.decode_step`` — tests
+assert this.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import Policy
+from repro.core.policies import PerRequestPolicy, Policy
 from repro.core.tracing import moe_layer_ids
 from repro.models import attention as attn_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import transformer as T
 from repro.models.common import ffn_apply, rms_norm
-from repro.serving.offload import HostExpertStore, make_offload_cache
+from repro.serving.offload import (HostExpertStore, OverlapTracker,
+                                   make_offload_cache)
 
 
 def unstack_layers(cfg, params) -> List[dict]:
@@ -42,42 +52,82 @@ def unstack_layers(cfg, params) -> List[dict]:
     return layers
 
 
+def sample_token(logits: np.ndarray, temperature: float,
+                 rng: np.random.Generator) -> int:
+    """Greedy/temperature sampling shared by the batch-1 and batched
+    engines — parity between their token streams depends on this being
+    one implementation."""
+    if temperature <= 0:
+        return int(np.argmax(logits))
+    p = np.exp((logits - logits.max()) / temperature)
+    return int(rng.choice(len(p), p=p / p.sum()))
+
+
+def bucket_size(n: int, max_batch: int) -> int:
+    """Smallest power of two >= n (capped at max_batch) — the padding
+    buckets the jitted halves are compiled for."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, max(max_batch, n))
+
+
 @dataclass
 class EngineStats:
     tokens: int = 0
     hits: int = 0
     misses: int = 0
     fetch_bytes: int = 0
-    sim_stall_s: float = 0.0
+    sim_stall_s: float = 0.0        # overlap-aware modeled stall
+    blocking_stall_s: float = 0.0   # every-fetch-stalls model (upper bound)
+    overlapped_s: float = 0.0       # transfer time hidden behind compute
+    steps: int = 0                  # batched decode steps executed
 
     @property
     def hit_rate(self):
         return self.hits / max(self.hits + self.misses, 1)
 
+    @property
+    def mean_batch(self):
+        return self.tokens / max(self.steps, 1)
 
-class OffloadEngine:
-    def __init__(self, model, params, policy: Optional[Policy],
-                 capacity: int, eviction: str = "lru",
-                 host_bw: float = 100e9, expert_backend: str = "jnp"):
+
+class DecodeCore:
+    """Shared batched decode machinery: jitted layer halves, the expert
+    cache/slot-buffer control plane, and the per-step host driver.
+
+    KV caches carry ``max_batch + 1`` rows; row ``max_batch`` is a scratch
+    row that padding lanes read/write so every bucket's scatter is
+    deterministic. Engines own request bookkeeping; the core owns device
+    state transforms and stall/hit accounting.
+    """
+
+    def __init__(self, model, params, capacity: int, eviction: str = "lru",
+                 host_bw: float = 100e9, expert_backend: str = "jnp",
+                 max_batch: int = 1, layer_compute_s: float = 0.0):
         cfg = model.cfg
         assert cfg.moe is not None, "offload engine needs an MoE backbone"
         self.cfg = cfg
         self.model = model
-        self.policy = policy
         self.params = params
         self.layers = unstack_layers(cfg, params)
         self.kinds = cfg.layer_kinds()
         self.moe_layers = moe_layer_ids(cfg)
         self.moe_index = {li: i for i, li in enumerate(self.moe_layers)}
         self.expert_backend = expert_backend
+        self.max_batch = max_batch
+        self.scratch_row = max_batch
+        self.layer_compute_s = layer_compute_s
 
         # host store gets the routed-expert weights; everything else stays
         # in self.layers (device)
         store_layers = [self.layers[li]["moe"] for li in self.moe_layers]
         self.store = HostExpertStore(store_layers)
+        self.tracker = OverlapTracker(host_bw)
         self.cache, self.slots = make_offload_cache(
-            self.store, capacity, eviction, host_bw)
+            self.store, capacity, eviction, host_bw, tracker=self.tracker)
         self.stats = EngineStats()
+        self._tok_emb_np = np.asarray(params["tok_emb"], np.float32)
         self._build_fns()
 
     # ------------------------------------------------------------------
@@ -85,20 +135,33 @@ class OffloadEngine:
         cfg = self.cfg
 
         @jax.jit
-        def embed_fn(tok_emb, token):
-            return jnp.take(tok_emb, token, axis=0)
+        def embed_fn(tok_emb, tokens):
+            # tokens: (N,) -> (N, 1, D)
+            return jnp.take(tok_emb, tokens, axis=0)[:, None, :]
 
-        @partial(jax.jit, static_argnames=("kind",))
-        def attn_half(lp, x, cache, pos, kind):
+        def attn_row(lp, x_row, cache_row, pos, *, kind):
+            # one request: x_row (D,), unbatched cache row, scalar pos
+            x = x_row[None, None, :]
+            cache = jax.tree.map(lambda c: c[None], cache_row)
             h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-            positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+            positions = jnp.full((1, 1), pos, jnp.int32)
             if kind == "mla":
                 o, nc = mla_mod.mla_apply(lp["attn"], cfg, h, positions,
                                           "decode", cache, pos)
             else:
                 o, nc = attn_mod.attn_apply(lp["attn"], cfg, kind, h,
                                             positions, "decode", cache, pos)
-            return x + o, nc
+            return (x + o)[0, 0], jax.tree.map(lambda c: c[0], nc)
+
+        @partial(jax.jit, static_argnames=("kind",))
+        def attn_batched(lp, x, caches, rows, pos, kind):
+            # x: (N,1,D); caches: full (max_batch+1, ...); rows/pos: (N,)
+            sub = jax.tree.map(lambda c: jnp.take(c, rows, axis=0), caches)
+            y, nsub = jax.vmap(partial(attn_row, kind=kind),
+                               in_axes=(None, 0, 0, 0))(lp, x[:, 0, :],
+                                                        sub, pos)
+            new = jax.tree.map(lambda c, n: c.at[rows].set(n), caches, nsub)
+            return y[:, None, :], new
 
         @jax.jit
         def dense_ffn_half(lp, x):
@@ -112,89 +175,195 @@ class OffloadEngine:
             return h, w, idx
 
         @jax.jit
-        def expert_from_slots(x_norm, weights, wg, wu, wd, shared, x):
-            # x_norm: (1,1,D); wg/wu: (k,d,f); wd: (k,f,d); weights: (1,1,k)
+        def expert_from_slots(x_norm, weights, slot_idx, wg_buf, wu_buf,
+                              wd_buf, shared, x):
+            # x_norm/x: (N,1,D); weights: (N,1,k); slot_idx: (N,k)
             from repro.kernels import ops
-            y = ops.expert_ffn(x_norm[0, 0], weights[0, 0], wg, wu, wd,
-                               backend=self.expert_backend)
-            out = x + y[None, None, :]
+            n, k = slot_idx.shape
+            flat = slot_idx.reshape(-1)
+            wg = jnp.take(wg_buf, flat, 0).reshape((n, k) + wg_buf.shape[1:])
+            wu = jnp.take(wu_buf, flat, 0).reshape((n, k) + wu_buf.shape[1:])
+            wd = jnp.take(wd_buf, flat, 0).reshape((n, k) + wd_buf.shape[1:])
+
+            def row(hr, wr, g, u, d):
+                return ops.expert_ffn(hr, wr, g, u, d,
+                                      backend=self.expert_backend)
+
+            y = jax.vmap(row)(x_norm[:, 0, :], weights[:, 0, :], wg, wu, wd)
+            out = x + y[:, None, :]
             if shared is not None:
                 out = out + ffn_apply(shared, x_norm, "swiglu")
             return out
 
         @jax.jit
         def unembed_fn(params, x):
-            logits = T.unembed(params, cfg, x)
-            return logits
+            return T.unembed(params, cfg, x)
 
         self._embed = embed_fn
-        self._attn_half = attn_half
+        self._attn = attn_batched
         self._dense_ffn = dense_ffn_half
         self._router = router_fn
         self._expert = expert_from_slots
         self._unembed = unembed_fn
 
     # ------------------------------------------------------------------
-    def init_state(self, cache_len: int):
-        caches = T.stack_cache_init(self.cfg, 1, cache_len,
+    def alloc_caches(self, cache_len: int) -> List[dict]:
+        """Per-layer list of batched (max_batch+1 rows) decode caches."""
+        caches = T.stack_cache_init(self.cfg, self.max_batch + 1, cache_len,
                                     jnp.dtype(self.cfg.dtype))
-        per_layer = unstack_layers(
+        return unstack_layers(
             self.cfg, {"stack": {"head": caches["head"],
                                  "scan": caches["scan"],
                                  "tail": caches["tail"]}})
-        return {"pos": 0, "caches": per_layer}
 
-    def decode_token(self, state, token: int):
-        """One token through all layers; returns (logits, state, experts)."""
+    def _next_moe(self, li: int) -> Optional[int]:
+        """MoE index of the first MoE layer at or after layer li."""
+        for lj in self.moe_layers:
+            if lj >= li:
+                return self.moe_index[lj]
+        return None
+
+    def _submit_prefetch(self, policy, rids, ts, mi: Optional[int]):
+        if policy is None or mi is None:
+            return
+        for pred in policy.predict_batch(rids, ts, mi):
+            self.cache.prefetch((mi, int(e)) for e in pred)
+
+    # ------------------------------------------------------------------
+    def step(self, caches, rows: Sequence[int], pos: Sequence[int],
+             tokens: Sequence[int], policy: Optional[PerRequestPolicy],
+             rids: Sequence[int]):
+        """One decode step for N active requests (N <= max_batch).
+
+        rows: KV-cache row per request; pos: per-request positions;
+        tokens: token fed per request. Returns (logits (N, V) f32,
+        new caches, per-request list of per-MoE-layer ground-truth sets).
+        """
         cfg = self.cfg
-        x = self._embed(self.params["tok_emb"],
-                        jnp.full((1, 1), token, jnp.int32))
-        pos = state["pos"]
-        experts_per_layer = []
+        n = len(rows)
+        ts = list(pos)
+        nb = bucket_size(n, self.max_batch)
+        pad = nb - n
+        rows_p = jnp.asarray(list(rows) + [self.scratch_row] * pad, jnp.int32)
+        pos_p = jnp.asarray(list(pos) + [0] * pad, jnp.int32)
+        toks_p = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
+        embeddings = self._tok_emb_np[np.asarray(tokens, np.int64)]
+
+        x = self._embed(self.params["tok_emb"], toks_p)
+        experts_out = [[] for _ in range(n)]
+        # double-buffer: predictions for the first MoE layer go onto the
+        # channel now, hiding behind the dense/attention layers below it
+        self._submit_prefetch(policy, rids, ts, self._next_moe(0))
         for li in range(cfg.num_layers):
             lp = self.layers[li]
             kind = self.kinds[li]
-            x, state["caches"][li] = self._attn_half(
-                lp, x, state["caches"][li], pos, kind=kind)
+            x, caches[li] = self._attn(lp, x, caches[li], rows_p, pos_p,
+                                       kind=kind)
+            self.tracker.advance(self.layer_compute_s)
             if li in self.moe_index:
                 mi = self.moe_index[li]
-                # 1) prefetch what the policy predicts for THIS layer
-                if self.policy is not None:
-                    pred = self.policy.predict(pos, mi)
-                    self.cache.prefetch((mi, int(e)) for e in pred)
-                # 2) router reveals ground truth
                 h, w, idx = self._router(lp, x)
-                gt = np.unique(np.asarray(idx)[0, 0])
-                for e in gt:
-                    hit = self.cache.access((mi, int(e)))
-                    self.stats.hits += int(hit)
-                    self.stats.misses += int(not hit)
-                # 3) compute from the slot buffer (order matches idx)
-                keys = [(mi, int(e)) for e in np.asarray(idx)[0, 0]]
-                wg, wu, wd = self.slots.gather(keys)
-                x = self._expert(h, w.astype(x.dtype), wg, wu, wd,
+                idx_np = np.asarray(idx)[:, 0, :]               # (nb, k)
+                gts, pinned = [], []
+                for i in range(n):                # active lanes only
+                    gt = np.unique(idx_np[i])
+                    gts.append(gt)
+                    for e in gt:
+                        key = (mi, int(e))
+                        hit = self.cache.access(key)
+                        self.stats.hits += int(hit)
+                        self.stats.misses += int(not hit)
+                        # pin immediately: a later lane's demand fetch must
+                        # not evict an expert this step still computes with
+                        self.cache.pin(key)
+                        pinned.append(key)
+                self.tracker.wait({(mi, int(e)) for gt in gts for e in gt})
+                slot_idx = np.zeros((nb, idx_np.shape[1]), np.int32)
+                for i in range(n):
+                    slot_idx[i] = self.slots.slot_ids(
+                        [(mi, int(e)) for e in idx_np[i]])
+                x = self._expert(h, w.astype(x.dtype),
+                                 jnp.asarray(slot_idx), self.slots.w_gate,
+                                 self.slots.w_up, self.slots.w_down,
                                  lp["moe"].get("shared"), x)
-                if self.policy is not None:
-                    emb = np.asarray(self.params["tok_emb"][token],
-                                     np.float32)
-                    self.policy.observe(pos, mi, gt, emb)
-                experts_per_layer.append(gt)
-            else:
+                for key in pinned:
+                    self.cache.unpin(key)
+                self.tracker.advance(self.layer_compute_s)
+                if policy is not None:
+                    policy.observe_batch(rids, ts, mi, gts, embeddings)
+                for i in range(n):
+                    experts_out[i].append(gts[i])
+                # double-buffer the NEXT MoE layer's predicted experts
+                self._submit_prefetch(policy, rids, ts,
+                                      self._next_moe(li + 1))
+            elif "ffn" in lp:
                 x = self._dense_ffn(lp, x)
-        logits = self._unembed(self.params, x)
-        state["pos"] = pos + 1
-        self.stats.tokens += 1
+        logits = np.asarray(self._unembed(self.params, x))[:n, 0]
+        self.stats.tokens += n
+        self.stats.steps += 1
         self.stats.fetch_bytes = self.slots.fetch_bytes
-        self.stats.sim_stall_s = self.slots.sim_fetch_s
-        return np.asarray(logits)[0, 0], state, experts_per_layer
+        self.stats.sim_stall_s = self.tracker.stall_s
+        self.stats.blocking_stall_s = self.slots.sim_fetch_s
+        self.stats.overlapped_s = self.tracker.overlapped_s
+        return logits, caches, experts_out
+
+
+class OffloadEngine:
+    """Batch-1 engine: the original public API on the shared DecodeCore."""
+
+    def __init__(self, model, params, policy: Optional[Policy],
+                 capacity: int, eviction: str = "lru",
+                 host_bw: float = 100e9, expert_backend: str = "jnp",
+                 layer_compute_s: float = 0.0):
+        self.core = DecodeCore(model, params, capacity, eviction, host_bw,
+                               expert_backend, max_batch=1,
+                               layer_compute_s=layer_compute_s)
+        self.cfg = self.core.cfg
+        self.model = model
+        self.params = params
+        self.policy = policy
+        # a single in-flight request may share one stateful instance
+        self._prp = (None if policy is None
+                     else PerRequestPolicy(policy, force_shared=True))
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.core.stats
+
+    @property
+    def cache(self):
+        return self.core.cache
+
+    @property
+    def slots(self):
+        return self.core.slots
+
+    @property
+    def store(self):
+        return self.core.store
+
+    @property
+    def layers(self):
+        return self.core.layers
+
+    def init_state(self, cache_len: int):
+        return {"pos": 0, "caches": self.core.alloc_caches(cache_len)}
+
+    def decode_token(self, state, token: int):
+        """One token through all layers; returns (logits, state, experts)."""
+        logits, caches, experts = self.core.step(
+            state["caches"], rows=[0], pos=[state["pos"]],
+            tokens=[int(token)], policy=self._prp, rids=[0])
+        state["caches"] = caches
+        state["pos"] = state["pos"] + 1
+        return logits[0], state, experts[0]
 
     def generate(self, prompt, max_new: int, cache_len: int,
                  temperature: float = 0.0, seed: int = 0):
         state = self.init_state(cache_len)
-        if self.policy is not None:
-            self.policy.begin_prompt(None)
+        if self._prp is not None:
+            self._prp.begin_request(0)
         rng = np.random.default_rng(seed)
-        out = list(prompt)
         cur = prompt[0]
         n_total = min(len(prompt) + max_new, cache_len)
         generated = []
@@ -203,10 +372,6 @@ class OffloadEngine:
             if t + 1 < len(prompt):
                 cur = prompt[t + 1]
             else:
-                if temperature <= 0:
-                    cur = int(np.argmax(logits))
-                else:
-                    p = np.exp((logits - logits.max()) / temperature)
-                    cur = int(rng.choice(len(p), p=p / p.sum()))
+                cur = sample_token(logits, temperature, rng)
                 generated.append(cur)
         return generated

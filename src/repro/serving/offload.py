@@ -6,13 +6,20 @@ HostExpertStore keeps every MoE layer's expert weights as host numpy arrays
 living on device (= "HBM"); fetching an expert is a host->device
 ``device_put`` into a slot. The control plane (which expert sits in which
 slot, eviction order, prefetch decisions) is core.cache.ExpertCache.
+
+Overlap model: the engines prefetch the *next* MoE layer's predicted experts
+before the current layer's attention runs, double-buffering the slot stack —
+filled slots for layer i+1 land while layer i computes. OverlapTracker
+models the single serial host->device channel against a compute clock:
+``submit`` queues a transfer, ``advance`` credits compute time that hides it,
+``wait`` charges only the un-overlapped remainder as stall. With zero
+credited compute the stall degenerates to the blocking demand-fetch model
+(``SlotBuffer.sim_fetch_s``) — tests pin both ends.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -44,16 +51,63 @@ class HostExpertStore:
         return (lp["w_gate"][e], lp["w_up"][e], lp["w_down"][e])
 
 
+class OverlapTracker:
+    """Modeled timeline of one serial host->device fetch channel.
+
+    ``clock`` is modeled compute time; transfers queue on ``channel_free``.
+    A transfer submitted at compute time t starts at max(t, channel_free)
+    and completes transfer_s later. ``wait`` advances the clock to the
+    completion time of the latest needed transfer, charging the gap as
+    stall — exactly the part of the fetch NOT hidden by compute.
+    """
+
+    def __init__(self, host_bw: float = 100e9):
+        self.host_bw = host_bw
+        self.clock = 0.0
+        self.channel_free = 0.0
+        self.pending: Dict[Key, float] = {}   # key -> modeled completion time
+        self._dur: Dict[Key, float] = {}      # key -> transfer duration
+        self.stall_s = 0.0
+        self.overlapped_s = 0.0               # transfer time hidden by compute
+
+    def submit(self, key: Key, nbytes: int) -> None:
+        start = max(self.clock, self.channel_free)
+        dur = nbytes / self.host_bw
+        self.channel_free = start + dur
+        self.pending[key] = start + dur
+        self._dur[key] = dur
+
+    def advance(self, compute_s: float) -> None:
+        """Compute time that overlaps any in-flight transfers."""
+        self.clock += compute_s
+
+    def wait(self, keys: Iterable[Key]) -> float:
+        """Block until every needed key's transfer has landed; returns the
+        stall charged for this wait."""
+        needed = [k for k in keys if k in self.pending]
+        if not needed:
+            return 0.0
+        t = max(self.pending.pop(k) for k in needed)
+        dur = sum(self._dur.pop(k, 0.0) for k in needed)
+        stall = max(0.0, t - self.clock)
+        self.stall_s += stall
+        self.overlapped_s += max(0.0, dur - stall)
+        self.clock = max(self.clock, t)
+        return stall
+
+
 class SlotBuffer:
     """Fixed-capacity device buffer of expert slots + host slot table."""
 
     def __init__(self, store: HostExpertStore, n_slots: int,
-                 host_bw: float = 100e9):
+                 host_bw: float = 100e9,
+                 tracker: Optional[OverlapTracker] = None):
         lp = store.layers[0]
         e, d, f = lp["w_gate"].shape
         self.store = store
         self.n_slots = n_slots
         self.host_bw = host_bw
+        self.tracker = tracker
         self.w_gate = jnp.zeros((n_slots, d, f), lp["w_gate"].dtype)
         self.w_up = jnp.zeros((n_slots, d, f), lp["w_up"].dtype)
         self.w_down = jnp.zeros((n_slots, f, d), lp["w_down"].dtype)
@@ -61,12 +115,15 @@ class SlotBuffer:
         self._free = list(range(n_slots))
         self.fetch_bytes = 0
         self.fetch_count = 0
-        self.sim_fetch_s = 0.0
+        self.sim_fetch_s = 0.0       # blocking model: every fetch stalls
 
     # --- control-plane callbacks wired into ExpertCache -------------------
     def release(self, key: Key) -> None:
         slot = self.slot_of.pop(key)
         self._free.append(slot)
+        if self.tracker is not None:
+            self.tracker.pending.pop(key, None)
+            self.tracker._dur.pop(key, None)
 
     def fill(self, key: Key) -> None:
         slot = self._free.pop()
@@ -79,6 +136,8 @@ class SlotBuffer:
         self.fetch_bytes += nbytes
         self.fetch_count += 1
         self.sim_fetch_s += nbytes / self.host_bw
+        if self.tracker is not None:
+            self.tracker.submit(key, nbytes)
 
     def gather(self, keys) -> tuple:
         """Return (k, ...) stacked expert weights for resident keys."""
@@ -87,11 +146,16 @@ class SlotBuffer:
                 jnp.take(self.w_up, slots, 0),
                 jnp.take(self.w_down, slots, 0))
 
+    def slot_ids(self, keys) -> np.ndarray:
+        """Host-side slot indices for resident keys (batched gather path)."""
+        return np.asarray([self.slot_of[k] for k in keys], np.int32)
+
 
 def make_offload_cache(store: HostExpertStore, capacity: int,
-                       eviction: str = "lru", host_bw: float = 100e9):
+                       eviction: str = "lru", host_bw: float = 100e9,
+                       tracker: Optional[OverlapTracker] = None):
     """(ExpertCache, SlotBuffer) wired together."""
-    buf = SlotBuffer(store, capacity, host_bw)
+    buf = SlotBuffer(store, capacity, host_bw, tracker)
     cache = ExpertCache(capacity, eviction, on_evict=buf.release,
                         on_insert=buf.fill)
     return cache, buf

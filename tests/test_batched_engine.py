@@ -1,0 +1,194 @@
+"""Batched async-prefetch serving engine: batched-vs-batch-1 parity,
+continuous batching, expert pinning, and overlap stall accounting."""
+import numpy as np
+import pytest
+
+from repro.core.cache import ExpertCache
+from repro.core.policies import (MoEInfinityPolicy, NextLayerAllPolicy,
+                                 NoPrefetchPolicy, PerRequestPolicy, Policy)
+from repro.core.tracing import moe_layer_ids
+from repro.serving.engine import OffloadEngine, bucket_size
+from repro.serving.scheduler import BatchedOffloadEngine
+
+from helpers import tiny_backbone
+
+PROMPTS = [[3, 17, 5], [99, 255, 7, 42], [13, 5], [21, 8, 9]]
+MAX_NEW = 6
+CACHE_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return tiny_backbone()
+
+
+@pytest.fixture(scope="module")
+def ref_streams(backbone):
+    """Batch-1 token streams, the parity reference for everything below."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = OffloadEngine(model, params, None, n_total)
+    return [eng.generate(p, MAX_NEW, CACHE_LEN) for p in PROMPTS]
+
+
+def test_batched_matches_batch1_streams(backbone, ref_streams):
+    """batch=4 at full capacity: per-request streams identical to batch-1."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=4)
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    for i, (ref, got) in enumerate(zip(ref_streams, outs)):
+        assert ref == got, f"request {i} diverged"
+    # 4 concurrent requests: far fewer steps than 4 sequential decodes
+    total_steps = sum(min(len(p) + MAX_NEW, CACHE_LEN) for p in PROMPTS)
+    assert eng.stats.steps < total_steps
+    assert eng.stats.tokens == total_steps
+    assert eng.stats.mean_batch > 2.0
+
+
+def test_continuous_batching_admits_queued_requests(backbone, ref_streams):
+    """More requests than rows: finished requests free rows for queued
+    ones and every stream still matches batch-1."""
+    cfg, model, params, _ = backbone
+    e = cfg.moe.num_experts
+    n_moe = len(moe_layer_ids(cfg))
+    cap = max(2 * cfg.moe.top_k + 1, (n_moe * e) // 4)
+    eng = BatchedOffloadEngine(model, params, NoPrefetchPolicy(), cap,
+                               max_batch=2)
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    for i, (ref, got) in enumerate(zip(ref_streams, outs)):
+        assert ref == got, f"request {i} diverged"
+    assert eng.stats.misses > 0          # small shared cache really misses
+    assert eng.stats.mean_batch <= 2.0
+
+
+def test_stateful_policy_per_request(backbone, ref_streams):
+    """A stateful policy factory gives every request its own state; a bare
+    stateful instance is rejected."""
+    cfg, model, params, _ = backbone
+    e = cfg.moe.num_experts
+    n_moe = len(moe_layer_ids(cfg))
+    cap = max(4 * cfg.moe.top_k, (n_moe * e) // 3)
+    eng = BatchedOffloadEngine(
+        model, params, lambda: MoEInfinityPolicy([], n_moe, e, width=4),
+        cap, max_batch=4)
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    for i, (ref, got) in enumerate(zip(ref_streams, outs)):
+        assert ref == got, f"request {i} diverged"
+    with pytest.raises(ValueError, match="per-request state"):
+        PerRequestPolicy(MoEInfinityPolicy([], n_moe, e, width=4))
+
+
+def test_capacity_guard(backbone):
+    cfg, model, params, _ = backbone
+    with pytest.raises(ValueError, match="pin more experts"):
+        BatchedOffloadEngine(model, params, None,
+                             capacity=cfg.moe.top_k, max_batch=4)
+
+
+# ---------------------------------------------------------------------------
+# pinning
+
+def test_cache_pinning_semantics():
+    c = ExpertCache(2, "lru")
+    c.access("a")
+    c.access("b")
+    c.pin("a")
+    c.access("c")                        # must evict b, not pinned a
+    assert "a" in c and "b" not in c and "c" in c
+    c.pin("c")
+    with pytest.raises(RuntimeError, match="pinned"):
+        c.access("d")                    # both residents pinned
+    c.unpin("a")
+    c.access("d")                        # now a is the victim
+    assert "a" not in c and "c" in c and "d" in c
+    # refcounting: two pins need two unpins
+    c.pin("d")
+    c.pin("d")
+    c.unpin("d")
+    assert c.pinned("d")
+    c.unpin("d")
+    assert not c.pinned("d")
+    with pytest.raises(AssertionError):
+        c.pin("zz")                      # pinning non-resident keys is a bug
+
+
+def test_pinning_under_concurrent_requests(backbone):
+    """Tight capacity + max_batch concurrent lanes: one lane's demand fetch
+    must not evict an expert another lane computes with this step — streams
+    stay correct right at the pinning floor."""
+    cfg, model, params, _ = backbone
+    cap = 2 * cfg.moe.top_k              # exactly the concurrent working set
+    eng = BatchedOffloadEngine(model, params, None, cap, max_batch=2)
+    ref = OffloadEngine(model, params, None, cap)
+    outs = eng.generate(PROMPTS[:2], max_new=MAX_NEW, cache_len=CACHE_LEN)
+    refs = [ref.generate(p, MAX_NEW, CACHE_LEN) for p in PROMPTS[:2]]
+    assert outs == refs
+
+
+# ---------------------------------------------------------------------------
+# overlap accounting
+
+def test_overlap_stall_bounds(backbone):
+    """sim_stall_s <= blocking stall always; equal when no compute overlaps
+    the channel (layer_compute_s=0, demand fetches only)."""
+    cfg, model, params, _ = backbone
+    e = cfg.moe.num_experts
+    n_moe = len(moe_layer_ids(cfg))
+    cap = max(4 * cfg.moe.top_k, (n_moe * e) // 4)
+
+    eng0 = BatchedOffloadEngine(model, params, NoPrefetchPolicy(), cap,
+                                max_batch=4, layer_compute_s=0.0)
+    eng0.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert eng0.stats.sim_stall_s > 0
+    assert eng0.stats.sim_stall_s == pytest.approx(
+        eng0.stats.blocking_stall_s)
+
+    eng1 = BatchedOffloadEngine(model, params, NextLayerAllPolicy(e), cap,
+                                max_batch=4, layer_compute_s=1e-4)
+    eng1.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert eng1.stats.sim_stall_s <= eng1.stats.blocking_stall_s
+    assert eng1.stats.overlapped_s > 0   # prefetch really hid transfers
+
+
+def test_batch1_engine_overlap_aware(backbone):
+    """The refactored batch-1 engine prefetches ahead too: with modeled
+    compute, prefetched fetches stop stalling the critical path."""
+    cfg, model, params, _ = backbone
+    e = cfg.moe.num_experts
+    n_moe = len(moe_layer_ids(cfg))
+    cap = max(2, (n_moe * e) // 2)
+    eng = OffloadEngine(model, params, NextLayerAllPolicy(e), cap,
+                        layer_compute_s=1e-3)
+    eng.generate(PROMPTS[0], max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert eng.stats.sim_stall_s < eng.stats.blocking_stall_s
+
+
+# ---------------------------------------------------------------------------
+# batched policy API
+
+def test_policy_predict_batch_default():
+    class Fixed(Policy):
+        stateless = True
+
+        def predict(self, t, layer):
+            return np.asarray([t, layer])
+
+    p = Fixed()
+    out = p.predict_batch([1, 2, 3], 5)
+    assert [o.tolist() for o in out] == [[1, 5], [2, 5], [3, 5]]
+    seen = []
+
+    class Rec(Policy):
+        stateless = True
+
+        def observe(self, t, layer, experts, embedding=None):
+            seen.append((t, layer, list(experts)))
+
+    Rec().observe_batch([0, 1], 2, [[3], [4]])
+    assert seen == [(0, 2, [3]), (1, 2, [4])]
+
+
+def test_bucket_size():
+    assert [bucket_size(n, 8) for n in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]

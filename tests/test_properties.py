@@ -1,6 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional dev dependency: locally the module skips
+cleanly when it is absent; CI installs it and runs these for real.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import ExpertCache
 from repro.core.eam import kmeans
