@@ -5,6 +5,14 @@ batched-vs-sequential decode throughput for the continuous-batching engine.
 CI smoke mode (no cached artifacts, tiny backbone, JSON artifact):
   PYTHONPATH=src python -m benchmarks.engine_bench --tiny \
       --out artifacts/engine_bench.json
+
+Mixed-length workload mode (--mixed): ragged prompts at batch >= 4 through
+the paged + chunked-prefill engine vs the token-by-token prompt path —
+reports per-request admission-to-first-token latency and the KV memory
+high-water (actual blocks allocated vs the contiguous batch x cache_len
+model):
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --mixed \
+      --out artifacts/engine_bench_mixed.json
 """
 from __future__ import annotations
 
@@ -56,6 +64,91 @@ def _throughput(model, params, cfg, prompts, max_new: int, cache_len: int,
             "mean_batch": bat.stats.mean_batch}
 
 
+def _mixed_workload(cfg, corpus, n_requests: int, seed: int):
+    """Ragged prompt lengths spanning sub-block to multi-block: the shape
+    continuous batching actually sees."""
+    from repro.data import sample_prompts
+    lengths = [4, 28, 8, 36, 6, 20, 32, 12][:n_requests]
+    rng_seed = seed
+    prompts = []
+    for i, ln in enumerate(lengths):
+        prompts.append(sample_prompts(corpus, 1, ln, seed=rng_seed + i)[0])
+    return prompts
+
+
+def _mixed_latency(model, params, cfg, prompts, max_new: int, cache_len: int,
+                   batch: int, log=print):
+    """Admission-to-first-token latency + KV memory high-water: paged engine
+    with chunked prefill vs the same engine on the token-by-token prompt
+    path (paged=False), same requests, batch >= 4."""
+    from repro.core.tracing import moe_layer_ids
+    from repro.serving.scheduler import BatchedOffloadEngine
+
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+
+    def ttft_stats(eng, rid_from):
+        # only the timed run's requests: the warm run's first tokens pay
+        # jit compilation and would swamp the scheduling signal
+        tt = sorted(v for r, v in eng.ttft().items() if r >= rid_from)
+        if not tt:
+            return {"mean": 0.0, "p50": 0.0, "max": 0.0}
+        return {"mean": float(sum(tt) / len(tt)),
+                "p50": float(tt[len(tt) // 2]),
+                "max": float(tt[-1])}
+
+    tok = BatchedOffloadEngine(model, params, None, n_total,
+                               max_batch=batch, paged=False)
+    tok.generate(prompts, max_new=2, cache_len=cache_len)            # warm
+    rid0 = tok._next_rid
+    t0 = time.perf_counter()
+    outs_tok = tok.generate(prompts, max_new=max_new, cache_len=cache_len)
+    tok_s = time.perf_counter() - t0
+    tok_tt = ttft_stats(tok, rid0)
+
+    pag = BatchedOffloadEngine(model, params, None, n_total,
+                               max_batch=batch, block_size=8,
+                               prefill_chunk=16)
+    pag.generate(prompts, max_new=2, cache_len=cache_len)            # warm
+    rid0 = pag._next_rid
+    chunks0, ptok0 = pag.stats.prefill_chunks, pag.stats.prefill_tokens
+    t0 = time.perf_counter()
+    outs_pag = pag.generate(prompts, max_new=max_new, cache_len=cache_len)
+    pag_s = time.perf_counter() - t0
+    pag_tt = ttft_stats(pag, rid0)
+
+    assert outs_pag == outs_tok, "paged/token prompt paths diverged"
+
+    # memory model: actual paged high-water vs contiguous batch x cache_len
+    per_tok = pag.kv_block_bytes / pag.block_size
+    rows_bytes = int(batch * cache_len * per_tok)
+    paged_bytes = pag.kv_high_water_bytes
+    log(f"  mixed-length batch={batch}: TTFT mean "
+        f"{tok_tt['mean'] * 1e3:.1f}ms token-path vs "
+        f"{pag_tt['mean'] * 1e3:.1f}ms paged+chunked "
+        f"({tok_tt['mean'] / max(pag_tt['mean'], 1e-9):.2f}x); KV high-water "
+        f"{paged_bytes / 2**10:.0f}KiB paged vs {rows_bytes / 2**10:.0f}KiB "
+        f"batch*cache_len rows "
+        f"({paged_bytes / max(rows_bytes, 1):.2f}x)")
+    return {
+        "ttft_token_mean_s": tok_tt["mean"],
+        "ttft_token_p50_s": tok_tt["p50"],
+        "ttft_token_max_s": tok_tt["max"],
+        "ttft_paged_mean_s": pag_tt["mean"],
+        "ttft_paged_p50_s": pag_tt["p50"],
+        "ttft_paged_max_s": pag_tt["max"],
+        "ttft_speedup": tok_tt["mean"] / max(pag_tt["mean"], 1e-9),
+        "wall_token_s": tok_s,
+        "wall_paged_s": pag_s,
+        "kv_high_water_bytes": paged_bytes,
+        "kv_rows_model_bytes": rows_bytes,
+        "kv_high_water_frac": paged_bytes / max(rows_bytes, 1),
+        "kv_blocks_high_water": pag.pool.stats.high_water,
+        "prefill_chunks": pag.stats.prefill_chunks - chunks0,
+        "prefill_tokens": pag.stats.prefill_tokens - ptok0,
+        "streams_identical": True,
+    }
+
+
 def run(log=print):
     from benchmarks.common import trained_predictor
     from repro.core.policies import (MoEInfinityPolicy, NextLayerAllPolicy,
@@ -99,9 +192,10 @@ def run(log=print):
     return out
 
 
-def run_tiny(out_path=None, log=print):
+def run_tiny(out_path=None, mixed=False, log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
-    writes the JSON artifact the workflow uploads."""
+    writes the JSON artifact the workflow uploads. ``mixed`` switches to the
+    ragged-length admission-latency / memory-high-water workload."""
     from repro.configs import get_reduced
     from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
     from repro.core.tracing import moe_layer_ids
@@ -117,10 +211,24 @@ def run_tiny(out_path=None, log=print):
     cfg = get_reduced(arch)
     model = build_model(cfg)
     corpus = make_topic_corpus(cfg.vocab_size, n_topics=4, seed=0)
-    prompts = sample_prompts(corpus, 4, 8, seed=1)
     n_moe = len(moe_layer_ids(cfg))
     e = cfg.moe.num_experts
 
+    if mixed:
+        prompts = _mixed_workload(cfg, corpus, n_requests=8, seed=11)
+        results = _mixed_latency(model, params, cfg, prompts, max_new=8,
+                                 cache_len=48, batch=4, log=log)
+        results["wall_s"] = time.time() - t0
+        log(f"  tiny mixed bench: {json.dumps(results, indent=2)}")
+        if out_path:
+            os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                        exist_ok=True)
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=2)
+            log(f"  wrote {out_path}")
+        return results
+
+    prompts = sample_prompts(corpus, 4, 8, seed=1)
     results = _throughput(model, params, cfg, prompts, max_new=12,
                           cache_len=32, batch=4, log=log)
 
@@ -157,10 +265,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny backbone, no cached artifacts")
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed-length workload: admission-to-first-token "
+                         "latency + KV memory high-water, paged vs token "
+                         "prompt path")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
-    if args.tiny:
-        run_tiny(args.out)
+    if args.tiny or args.mixed:
+        run_tiny(args.out, mixed=args.mixed)
     else:
         results = run()
         if args.out:

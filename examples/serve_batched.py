@@ -88,6 +88,14 @@ def main():
     print(f"modeled stall: {s.sim_stall_s * 1e3:.1f} ms overlapped vs "
           f"{s.blocking_stall_s * 1e3:.1f} ms blocking "
           f"({s.overlapped_s * 1e3:.1f} ms hidden behind compute)")
+    if engine.pool is not None:
+        ps = engine.pool.stats
+        tt = sorted(engine.ttft().values())
+        p50 = f"{tt[len(tt) // 2] * 1e3:.0f} ms" if tt else "n/a"
+        print(f"paged KV: {s.prefill_tokens} prompt tokens in "
+              f"{s.prefill_chunks} prefill chunks; {ps.high_water} blocks "
+              f"high-water ({engine.kv_high_water_bytes / 2**10:.0f} KiB) of "
+              f"{engine.pool.num_blocks - 1}; TTFT p50 {p50}")
     for rid, out in enumerate(outs[: 4]):
         print(f"  req {rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
 

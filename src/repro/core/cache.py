@@ -15,8 +15,9 @@ from typing import Hashable, Iterable
 class CacheStats:
     hits: int = 0
     misses: int = 0
-    prefetches: int = 0
+    prefetches: int = 0        # prefetches that actually inserted an entry
     prefetch_hits: int = 0     # accesses served by a prefetched entry
+    redundant_prefetches: int = 0  # prefetches of an already-resident key
     evictions: int = 0
     demand_fetches: int = 0
 
@@ -89,10 +90,7 @@ class ExpertCache:
         self.stats.evictions += 1
 
     def _insert(self, key, prefetched: bool) -> None:
-        if key in self._entries:
-            self._entries.move_to_end(key)
-            # an entry re-prefetched keeps its original provenance
-            return
+        assert key not in self._entries
         while len(self._entries) >= self.capacity:
             self._evict_one()
         self._entries[key] = prefetched
@@ -101,8 +99,17 @@ class ExpertCache:
 
     def prefetch(self, keys: Iterable[Hashable]) -> None:
         for key in keys:
-            if key not in self._entries:
-                self.stats.prefetches += 1
+            if key in self._entries:
+                # re-prefetch of a resident key is a no-op hit: no insert,
+                # no slot traffic, no provenance change — stats.prefetches
+                # counts exactly the entries moved. The key's recency IS
+                # refreshed (a prefetch declares intent-to-use, and must
+                # protect the key from the rest of the same burst's
+                # evictions — the oracle's 100% hit rate depends on it).
+                self.stats.redundant_prefetches += 1
+                self._entries.move_to_end(key)
+                continue
+            self.stats.prefetches += 1
             self._insert(key, prefetched=True)
 
     def access(self, key) -> bool:

@@ -274,6 +274,57 @@ class OnlineMoEBeyondPolicy(Policy):
         sel = select_experts(logits, self.width, threshold=-1e9)
         return np.nonzero(sel)[0]
 
+    @staticmethod
+    def batchable(policies: Sequence["Policy"]) -> bool:
+        """True when one vectorised forward can serve every instance: all
+        OnlineMoEBeyondPolicy sharing the same predictor weights (the
+        per-request-factory pattern closes over one trained predictor)."""
+        if not policies:
+            return False
+        first = policies[0]
+        return (isinstance(first, OnlineMoEBeyondPolicy) and
+                all(isinstance(p, OnlineMoEBeyondPolicy)
+                    and p.params is first.params and p.pcfg == first.pcfg
+                    for p in policies))
+
+    @staticmethod
+    def predict_many(policies: Sequence["OnlineMoEBeyondPolicy"],
+                     layer: int) -> List[np.ndarray]:
+        """Cross-request batched prediction: ONE jitted predictor forward
+        for all in-flight requests instead of a per-request Python loop.
+
+        Requests are right-padded to a shared power-of-two length bucket
+        (bounding recompiles); the causal+padding mask makes position
+        ``n_i - 1`` of each row attend to exactly that request's observed
+        embeddings, so per-request results match the scalar ``predict``.
+        """
+        import jax.numpy as jnp
+
+        from repro.core.metrics import select_experts
+        pc = policies[0].pcfg
+        ns = [min(len(p._emb), pc.max_seq) for p in policies]
+        out: List[np.ndarray] = [np.empty((0,), np.int64)] * len(policies)
+        live = [i for i, n in enumerate(ns) if n > 0]
+        if not live:
+            return out
+        tb = 1
+        while tb < max(ns[i] for i in live):         # pow-of-two seq bucket
+            tb *= 2
+        emb = np.zeros((len(live), tb, pc.token_emb_dim), np.float32)
+        mask = np.zeros((len(live), tb), bool)
+        for j, i in enumerate(live):
+            emb[j, : ns[i]] = np.stack(policies[i]._emb[-ns[i]:])
+            mask[j, : ns[i]] = True
+        logits = np.asarray(policies[0]._apply(
+            policies[0].params, jnp.asarray(emb),
+            jnp.full((len(live), tb), layer, jnp.int32),
+            jnp.asarray(mask)))
+        for j, i in enumerate(live):
+            lg = logits[j, ns[i] - 1, : pc.num_experts]
+            sel = select_experts(lg, policies[i].width, threshold=-1e9)
+            out[i] = np.nonzero(sel)[0]
+        return out
+
 
 class PerRequestPolicy:
     """Per-request policy state behind the batched predict/observe API.
@@ -322,7 +373,11 @@ class PerRequestPolicy:
                       layer: int) -> List[np.ndarray]:
         if self._shared is not None:   # shared policy: use its batched path
             return self._shared.predict_batch(ts, layer)
-        return [self._get(r).predict(t, layer) for r, t in zip(rids, ts)]
+        pols = [self._get(r) for r in rids]
+        if len(pols) > 1 and OnlineMoEBeyondPolicy.batchable(pols):
+            # one jitted predictor forward across in-flight requests
+            return OnlineMoEBeyondPolicy.predict_many(pols, layer)
+        return [p.predict(t, layer) for p, t in zip(pols, ts)]
 
     def observe_batch(self, rids: Sequence[int], ts: Sequence[int],
                       layer: int, experts_per_req, embeddings=None) -> None:

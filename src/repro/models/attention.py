@@ -119,6 +119,27 @@ def _fill_cache(cfg, kind, k, v, t, cache_len):
     return {"k": k[:, src_c], "v": v[:, src_c]}
 
 
+def _gqa_attend(q, ck, cv, valid, out_dtype):
+    """Grouped-query decode attention shared by the contiguous decode
+    branch and the paged paths — one implementation so the paged engine's
+    token-identity to contiguous decode can't drift.
+
+    q: (B,T,H,hd); ck/cv: (B,S,KVH,hd); valid broadcastable to (B,T,S).
+    Returns (B,T,H,hd).
+    """
+    b, t, h, hd = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, t, kvh, g, hd)
+    scores = jnp.einsum("btngd,bsnd->bngts", qg, ck).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    valid = jnp.broadcast_to(valid, (b, t, ck.shape[1]))
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    out = jnp.einsum("bngts,bsnd->btngd", probs, cv)
+    return out.reshape(b, t, h, hd)
+
+
 def _decode_valid(kind: str, cfg, slots, pos):
     """Validity of each cache slot when decoding token at absolute ``pos``."""
     if kind == "global":
@@ -158,19 +179,104 @@ def attn_apply(p, cfg, kind, x, positions, mode, cache=None, pos=None,
         cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
         slots = jnp.arange(ck.shape[1])
         valid = _decode_valid(kind, cfg, slots, pos)
-        kvh, hd = ck.shape[2], ck.shape[3]
-        g = cfg.num_heads // kvh
-        qg = q.reshape(b, 1, kvh, g, hd)
-        scores = jnp.einsum("btngd,bsnd->bngts", qg, ck).astype(jnp.float32)
-        scores = scores * (hd ** -0.5)
-        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
-        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = jnp.einsum("bngts,bsnd->btngd", probs, cv)
-        out = out.reshape(b, 1, cfg.num_heads, hd)
+        out = _gqa_attend(q, ck, cv, valid[None, None, :], x.dtype)
         new_cache = {"k": ck, "v": cv}
 
     y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
     return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-table) decode path — serving/kvpool.py owns the block
+# id space; here blocks are just the leading axis of the pool tensors. The
+# contiguous row cache above remains the fallback (batch-1 engine, training).
+
+def paged_init_cache(cfg, num_blocks: int, block_size: int, dtype):
+    """Block-paged pool for a *global* attention layer: block b, slot s holds
+    K/V for absolute position ``table.index(b) * block_size + s``."""
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((num_blocks, block_size, kvh, hd), dtype),
+        "v": jnp.zeros((num_blocks, block_size, kvh, hd), dtype),
+    }
+
+
+def _paged_scatter(cache, k_new, v_new, bids, slots):
+    """Write one K/V entry per request: k_new/v_new (N, KVH, hd),
+    bids/slots (N,). Distinct requests own distinct blocks so the batched
+    scatter is race-free; padding lanes all target the scratch block."""
+    return {
+        "k": cache["k"].at[bids, slots].set(k_new),
+        "v": cache["v"].at[bids, slots].set(v_new),
+    }
+
+
+def _paged_gather(cache, tables):
+    """tables: (N, W) int32 -> K/V (N, W*block_size, KVH, hd) in absolute
+    position order (logical block i of the table covers positions
+    [i*bs, (i+1)*bs))."""
+    n, w = tables.shape
+    bs = cache["k"].shape[1]
+    k = jnp.take(cache["k"], tables.reshape(-1), axis=0)
+    v = jnp.take(cache["v"], tables.reshape(-1), axis=0)
+    shp = (n, w * bs) + cache["k"].shape[2:]
+    return k.reshape(shp), v.reshape(shp)
+
+
+def _paged_qkv(p, cfg, x, positions):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dnk->btnk", x, p["wk"])
+    v = jnp.einsum("btd,dnk->btnk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def paged_attn_decode(p, cfg, x, cache, tables, pos):
+    """One decode token per lane through the paged cache.
+
+    x: (N,1,D); tables: (N,W) int32 block tables; pos: (N,) positions.
+    Returns (y (N,1,D), new cache). Global attention only — ring-buffer
+    kinds keep their bounded per-row caches.
+    """
+    bs = cache["k"].shape[1]
+    q, k, v = _paged_qkv(p, cfg, x, pos[:, None])
+    bids = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    cache = _paged_scatter(cache, k[:, 0], v[:, 0], bids, pos % bs)
+    ck, cv = _paged_gather(cache, tables)
+    valid = (jnp.arange(ck.shape[1])[None, None, :]
+             <= pos[:, None, None])                        # (N,1,S)
+    out = _gqa_attend(q, ck, cv, valid, x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return y, cache
+
+
+def paged_attn_prefill(p, cfg, x, cache, table, t0, n_valid):
+    """One prompt chunk of a single request through the paged cache.
+
+    x: (1,C,D) — C is the (padded) chunk bucket, the first ``n_valid``
+    tokens are real and sit at absolute positions t0..t0+n_valid-1; pad
+    tokens scatter to the scratch block. Per-token math is identical to
+    feeding the chunk token-by-token through ``paged_attn_decode``, so the
+    chunked-prefill stream stays token-identical to the decode path.
+    """
+    c = x.shape[1]
+    bs = cache["k"].shape[1]
+    idx = jnp.arange(c)
+    positions = t0 + idx[None, :]                          # (1,C)
+    q, k, v = _paged_qkv(p, cfg, x, positions)
+    real = idx < n_valid
+    p_abs = t0 + idx
+    lb = jnp.clip(p_abs // bs, 0, table.shape[0] - 1)
+    bids = jnp.where(real, jnp.take(table, lb), 0)
+    slots = jnp.where(real, p_abs % bs, 0)
+    cache = _paged_scatter(cache, k[0], v[0], bids, slots)
+    ck, cv = _paged_gather(cache, table[None, :])          # (1,S,KVH,hd)
+    valid = (jnp.arange(ck.shape[1])[None, None, :]
+             <= positions[:, :, None])                     # (1,C,S)
+    out = _gqa_attend(q, ck, cv, valid, x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return y, cache
 
 
 # ---------------------------------------------------------------------------

@@ -104,14 +104,96 @@ def mla_apply(p, cfg, x, positions, mode, cache=None, pos=None, cache_len=0):
     ckv_new, krope_new = _project_ckv(p, cfg, x, positions)
     c = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
     r = jax.lax.dynamic_update_slice(cache["krope"], krope_new, (0, pos, 0))
+    valid = (jnp.arange(c.shape[1]) <= pos)[None, None, :]   # (1,1,S)
+    y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    return y, {"ckv": c, "krope": r}
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, out_dtype):
+    """Absorbed-attention core shared by contiguous decode and the paged
+    paths: q_nope (B,T,h,n), q_rope (B,T,h,rr), c (B,S,rank), r (B,S,rr),
+    valid broadcastable to (B,T,S). Returns y (B,T,D)."""
+    m = cfg.mla
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
     q_abs = jnp.einsum("bthn,chn->bthc", q_nope, p["w_uk"])
     scores = (jnp.einsum("bthc,bsc->bhts", q_abs, c)
               + jnp.einsum("bthr,bsr->bhts", q_rope, r)).astype(jnp.float32)
     scores = scores * scale
-    valid = jnp.arange(c.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    valid = jnp.broadcast_to(valid, (scores.shape[0],) + scores.shape[2:])
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
     o_lat = jnp.einsum("bhts,bsc->bthc", probs, c)
     out = jnp.einsum("bthc,chv->bthv", o_lat, p["w_uv"])
-    y = jnp.einsum("bthv,hvd->btd", out, p["wo"])
-    return y, {"ckv": c, "krope": r}
+    return jnp.einsum("bthv,hvd->btd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-table) paths — the compressed latent pages exactly
+# like K/V: block b slot s of every MLA layer's pool holds ckv/krope for the
+# absolute position a request's block table maps there. serving/kvpool.py
+# owns the block id space; block 0 is the scratch block for padding lanes.
+
+def mla_paged_init_cache(cfg, num_blocks: int, block_size: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((num_blocks, block_size, m.rope_head_dim), dtype),
+    }
+
+
+def _mla_paged_gather(cache, tables):
+    """tables: (N,W) -> (ckv (N,W*bs,rank), krope (N,W*bs,rr)) in absolute
+    position order."""
+    n, w = tables.shape
+    bs = cache["ckv"].shape[1]
+    flat = tables.reshape(-1)
+    c = jnp.take(cache["ckv"], flat, axis=0).reshape(
+        n, w * bs, cache["ckv"].shape[-1])
+    r = jnp.take(cache["krope"], flat, axis=0).reshape(
+        n, w * bs, cache["krope"].shape[-1])
+    return c, r
+
+
+def mla_paged_decode(p, cfg, x, cache, tables, pos):
+    """One decode token per lane: x (N,1,D), tables (N,W), pos (N,)."""
+    bs = cache["ckv"].shape[1]
+    positions = pos[:, None]
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    ckv_new, krope_new = _project_ckv(p, cfg, x, positions)
+    bids = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    slots = pos % bs
+    cache = {
+        "ckv": cache["ckv"].at[bids, slots].set(ckv_new[:, 0]),
+        "krope": cache["krope"].at[bids, slots].set(krope_new[:, 0]),
+    }
+    c, r = _mla_paged_gather(cache, tables)
+    valid = (jnp.arange(c.shape[1])[None, None, :]
+             <= pos[:, None, None])                        # (N,1,S)
+    y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    return y, cache
+
+
+def mla_paged_prefill(p, cfg, x, cache, table, t0, n_valid):
+    """One prompt chunk of a single request: x (1,C,D), the first
+    ``n_valid`` tokens are real at positions t0..t0+n_valid-1; pads scatter
+    to the scratch block. Per-token math matches ``mla_paged_decode``."""
+    c_len = x.shape[1]
+    bs = cache["ckv"].shape[1]
+    idx = jnp.arange(c_len)
+    positions = t0 + idx[None, :]                          # (1,C)
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    ckv_new, krope_new = _project_ckv(p, cfg, x, positions)
+    real = idx < n_valid
+    p_abs = t0 + idx
+    lb = jnp.clip(p_abs // bs, 0, table.shape[0] - 1)
+    bids = jnp.where(real, jnp.take(table, lb), 0)
+    slots = jnp.where(real, p_abs % bs, 0)
+    cache = {
+        "ckv": cache["ckv"].at[bids, slots].set(ckv_new[0]),
+        "krope": cache["krope"].at[bids, slots].set(krope_new[0]),
+    }
+    c, r = _mla_paged_gather(cache, table[None, :])
+    valid = (jnp.arange(c.shape[1])[None, None, :]
+             <= positions[:, :, None])                     # (1,C,S)
+    y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    return y, cache

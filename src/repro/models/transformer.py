@@ -78,6 +78,32 @@ def block_cache_init(cfg, kind: str, batch: int, cache_len: int, dtype):
     raise ValueError(kind)
 
 
+# Attention kinds whose decode KV grows with the sequence — these page
+# through block tables in the paged serving engine. Ring-buffer kinds
+# (local/chunked) and recurrent kinds keep bounded per-request rows.
+PAGED_KINDS = ("global", "mla")
+
+
+def block_paged_cache_init(cfg, kind: str, num_blocks: int, block_size: int,
+                           row_batch: int, dtype):
+    """Per-layer decode cache for the block-paged serving engine.
+
+    Paged kinds get a (num_blocks, block_size, ...) pool sharing one block-id
+    space across layers (serving/kvpool.py); bounded kinds keep ``row_batch``
+    contiguous rows exactly like ``block_cache_init`` (the scratch row
+    included).
+    """
+    if kind == "mla":
+        return mla.mla_paged_init_cache(cfg, num_blocks, block_size, dtype)
+    if kind == "global":
+        return attn.paged_init_cache(cfg, num_blocks, block_size, dtype)
+    if kind in ("local", "chunked"):
+        return attn.init_cache(cfg, kind, row_batch, 0, dtype)  # ring-sized
+    # recurrent kinds have no DecodeCore decode path at all, so the paged
+    # engine's paged_ok gate rejects them before reaching here
+    raise ValueError(f"no paged decode cache for layer kind {kind!r}")
+
+
 def block_apply(p, cfg, kind: str, x, positions, mode: str,
                 cache=None, pos=None, cache_len: int = 0):
     """Returns (x, new_cache, extras)."""

@@ -17,6 +17,13 @@ FFN runs from the slot buffer via the gather path (kernels/expert_ffn).
 continuous-batching engine on the same core. With capacity == all experts
 both are bit-identical to the monolithic ``model.decode_step`` — tests
 assert this.
+
+The core speaks two KV layouts: contiguous per-request rows (the batch-1
+fallback and ring-buffer kinds), and the **block-paged** layout of
+serving/kvpool.py — ``step(..., tables=)`` gathers/scatters K/V through
+per-request block tables, and ``prefill_chunk`` absorbs a prompt chunk of
+one request through the same paged pools (power-of-two chunk buckets,
+per-token math identical to decode, so streams stay token-identical).
 """
 from __future__ import annotations
 
@@ -74,7 +81,7 @@ def bucket_size(n: int, max_batch: int) -> int:
 
 @dataclass
 class EngineStats:
-    tokens: int = 0
+    tokens: int = 0                 # all tokens processed (decode + prefill)
     hits: int = 0
     misses: int = 0
     fetch_bytes: int = 0
@@ -82,6 +89,8 @@ class EngineStats:
     blocking_stall_s: float = 0.0   # every-fetch-stalls model (upper bound)
     overlapped_s: float = 0.0       # transfer time hidden behind compute
     steps: int = 0                  # batched decode steps executed
+    prefill_tokens: int = 0         # prompt tokens absorbed by chunked prefill
+    prefill_chunks: int = 0         # chunked-prefill steps executed
 
     @property
     def hit_rate(self):
@@ -89,7 +98,8 @@ class EngineStats:
 
     @property
     def mean_batch(self):
-        return self.tokens / max(self.steps, 1)
+        """Mean decode lanes per decode step (prefill excluded)."""
+        return (self.tokens - self.prefill_tokens) / max(self.steps, 1)
 
 
 class DecodeCore:
@@ -104,7 +114,8 @@ class DecodeCore:
 
     def __init__(self, model, params, capacity: int, eviction: str = "lru",
                  host_bw: float = 100e9, expert_backend: str = "jnp",
-                 max_batch: int = 1, layer_compute_s: float = 0.0):
+                 max_batch: int = 1, layer_compute_s: float = 0.0,
+                 max_prefill_chunk: int = 8):
         cfg = model.cfg
         assert cfg.moe is not None, "offload engine needs an MoE backbone"
         self.cfg = cfg
@@ -118,6 +129,7 @@ class DecodeCore:
         self.max_batch = max_batch
         self.scratch_row = max_batch
         self.layer_compute_s = layer_compute_s
+        self.max_prefill_chunk = max_prefill_chunk
 
         # host store gets the routed-expert weights; everything else stays
         # in self.layers (device)
@@ -138,6 +150,11 @@ class DecodeCore:
         def embed_fn(tok_emb, tokens):
             # tokens: (N,) -> (N, 1, D)
             return jnp.take(tok_emb, tokens, axis=0)[:, None, :]
+
+        @jax.jit
+        def embed_seq_fn(tok_emb, tokens):
+            # tokens: (C,) -> (1, C, D), one request's prompt chunk
+            return jnp.take(tok_emb, tokens, axis=0)[None, :, :]
 
         def attn_row(lp, x_row, cache_row, pos, *, kind):
             # one request: x_row (D,), unbatched cache row, scalar pos
@@ -162,6 +179,30 @@ class DecodeCore:
                                                         sub, pos)
             new = jax.tree.map(lambda c, n: c.at[rows].set(n), caches, nsub)
             return y[:, None, :], new
+
+        @partial(jax.jit, static_argnames=("kind",))
+        def paged_attn_step(lp, x, cache, tables, pos, kind):
+            # x: (N,1,D); cache: block pool; tables: (N,W); pos: (N,)
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if kind == "mla":
+                o, nc = mla_mod.mla_paged_decode(lp["attn"], cfg, h, cache,
+                                                 tables, pos)
+            else:
+                o, nc = attn_mod.paged_attn_decode(lp["attn"], cfg, h, cache,
+                                                   tables, pos)
+            return x + o, nc
+
+        @partial(jax.jit, static_argnames=("kind",))
+        def paged_prefill_step(lp, x, cache, table, t0, n_valid, kind):
+            # x: (1,C,D) chunk of ONE request; table: (W,); t0/n_valid scalar
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if kind == "mla":
+                o, nc = mla_mod.mla_paged_prefill(lp["attn"], cfg, h, cache,
+                                                  table, t0, n_valid)
+            else:
+                o, nc = attn_mod.paged_attn_prefill(lp["attn"], cfg, h, cache,
+                                                    table, t0, n_valid)
+            return x + o, nc
 
         @jax.jit
         def dense_ffn_half(lp, x):
@@ -200,7 +241,10 @@ class DecodeCore:
             return T.unembed(params, cfg, x)
 
         self._embed = embed_fn
+        self._embed_seq = embed_seq_fn
         self._attn = attn_batched
+        self._paged_attn = paged_attn_step
+        self._paged_prefill = paged_prefill_step
         self._dense_ffn = dense_ffn_half
         self._router = router_fn
         self._expert = expert_from_slots
@@ -216,6 +260,38 @@ class DecodeCore:
                                  "scan": caches["scan"],
                                  "tail": caches["tail"]}})
 
+    def alloc_paged_caches(self, num_blocks: int,
+                           block_size: int) -> List[dict]:
+        """Per-layer paged decode caches: layers whose KV grows with the
+        sequence get (num_blocks, block_size, ...) pools sharing ONE block-id
+        space (serving/kvpool.py); bounded kinds keep max_batch+1 rows."""
+        return [T.block_paged_cache_init(self.cfg, self.kinds[li], num_blocks,
+                                         block_size, self.max_batch + 1,
+                                         jnp.dtype(self.cfg.dtype))
+                for li in range(self.cfg.num_layers)]
+
+    @property
+    def paged_ok(self) -> bool:
+        """Every layer kind is decodable by the paged step (paged pools for
+        growing KV, bounded rows for ring buffers)."""
+        return all(k in T.PAGED_KINDS + ("local", "chunked")
+                   for k in self.kinds)
+
+    @property
+    def chunk_prefill_ok(self) -> bool:
+        """Chunked prefill needs every layer's state reachable through block
+        tables — ring/recurrent kinds fall back to token-by-token prompts."""
+        return all(k in T.PAGED_KINDS for k in self.kinds)
+
+    def paged_block_bytes(self, caches) -> int:
+        """Device bytes ONE pool block occupies summed across paged layers —
+        the unit the memory high-water scales in."""
+        total = 0
+        for li, c in enumerate(caches):
+            if self.kinds[li] in T.PAGED_KINDS:
+                total += sum(v.nbytes // v.shape[0] for v in c.values())
+        return total
+
     def _next_moe(self, li: int) -> Optional[int]:
         """MoE index of the first MoE layer at or after layer li."""
         for lj in self.moe_layers:
@@ -230,14 +306,59 @@ class DecodeCore:
             self.cache.prefetch((mi, int(e)) for e in pred)
 
     # ------------------------------------------------------------------
+    def _moe_units(self, mi: int, lp, h, w, x, idx_np: np.ndarray,
+                   n_real: int):
+        """Expert half shared by decode steps and prefill chunks.
+
+        A "unit" is one token needing top-k experts: decode lanes, or the
+        tokens of one prefill chunk. h/w/x: (U,1,...) device arrays (pad
+        units included); idx_np: (U,k); only the first n_real units touch
+        the cache. Returns (x_out, per-live-unit ground-truth sets).
+        """
+        gts, pinned = [], []
+        for i in range(n_real):                   # live units only
+            gt = np.unique(idx_np[i])
+            gts.append(gt)
+            for e in gt:
+                key = (mi, int(e))
+                hit = self.cache.access(key)
+                self.stats.hits += int(hit)
+                self.stats.misses += int(not hit)
+                # pin immediately: a later unit's demand fetch must not
+                # evict an expert this step still computes with
+                self.cache.pin(key)
+                pinned.append(key)
+        self.tracker.wait({(mi, int(e)) for gt in gts for e in gt})
+        slot_idx = np.zeros(idx_np.shape, np.int32)
+        for i in range(n_real):
+            slot_idx[i] = self.slots.slot_ids(
+                [(mi, int(e)) for e in idx_np[i]])
+        x = self._expert(h, w, jnp.asarray(slot_idx), self.slots.w_gate,
+                         self.slots.w_up, self.slots.w_down,
+                         lp["moe"].get("shared"), x)
+        for key in pinned:
+            self.cache.unpin(key)
+        self.tracker.advance(self.layer_compute_s)
+        return x, gts
+
+    def _sync_stats(self):
+        self.stats.fetch_bytes = self.slots.fetch_bytes
+        self.stats.sim_stall_s = self.tracker.stall_s
+        self.stats.blocking_stall_s = self.slots.sim_fetch_s
+        self.stats.overlapped_s = self.tracker.overlapped_s
+
     def step(self, caches, rows: Sequence[int], pos: Sequence[int],
              tokens: Sequence[int], policy: Optional[PerRequestPolicy],
-             rids: Sequence[int]):
+             rids: Sequence[int], tables: Optional[np.ndarray] = None):
         """One decode step for N active requests (N <= max_batch).
 
-        rows: KV-cache row per request; pos: per-request positions;
-        tokens: token fed per request. Returns (logits (N, V) f32,
-        new caches, per-request list of per-MoE-layer ground-truth sets).
+        rows: KV-cache row per request; pos: per-request positions; tokens:
+        token fed per request. With ``tables`` (N, W) int32 block tables,
+        layers whose KV grows run through the paged pools (``tables`` row i
+        must already cover position ``pos[i]``) while ring-buffer kinds keep
+        using ``rows``; without it every layer uses contiguous rows. Returns
+        (logits (N, V) f32, new caches, per-request per-MoE-layer
+        ground-truth sets).
         """
         cfg = self.cfg
         n = len(rows)
@@ -248,6 +369,12 @@ class DecodeCore:
         pos_p = jnp.asarray(list(pos) + [0] * pad, jnp.int32)
         toks_p = jnp.asarray(list(tokens) + [0] * pad, jnp.int32)
         embeddings = self._tok_emb_np[np.asarray(tokens, np.int64)]
+        if tables is not None:
+            # pad lanes get all-scratch tables: their scatters land in the
+            # scratch block, never a live request's pages
+            tab_p = np.zeros((nb, tables.shape[1]), np.int32)
+            tab_p[:n] = tables
+            tab_p = jnp.asarray(tab_p)
 
         x = self._embed(self.params["tok_emb"], toks_p)
         experts_out = [[] for _ in range(n)]
@@ -257,38 +384,19 @@ class DecodeCore:
         for li in range(cfg.num_layers):
             lp = self.layers[li]
             kind = self.kinds[li]
-            x, caches[li] = self._attn(lp, x, caches[li], rows_p, pos_p,
-                                       kind=kind)
+            if tables is not None and kind in T.PAGED_KINDS:
+                x, caches[li] = self._paged_attn(lp, x, caches[li], tab_p,
+                                                 pos_p, kind=kind)
+            else:
+                x, caches[li] = self._attn(lp, x, caches[li], rows_p, pos_p,
+                                           kind=kind)
             self.tracker.advance(self.layer_compute_s)
             if li in self.moe_index:
                 mi = self.moe_index[li]
                 h, w, idx = self._router(lp, x)
                 idx_np = np.asarray(idx)[:, 0, :]               # (nb, k)
-                gts, pinned = [], []
-                for i in range(n):                # active lanes only
-                    gt = np.unique(idx_np[i])
-                    gts.append(gt)
-                    for e in gt:
-                        key = (mi, int(e))
-                        hit = self.cache.access(key)
-                        self.stats.hits += int(hit)
-                        self.stats.misses += int(not hit)
-                        # pin immediately: a later lane's demand fetch must
-                        # not evict an expert this step still computes with
-                        self.cache.pin(key)
-                        pinned.append(key)
-                self.tracker.wait({(mi, int(e)) for gt in gts for e in gt})
-                slot_idx = np.zeros((nb, idx_np.shape[1]), np.int32)
-                for i in range(n):
-                    slot_idx[i] = self.slots.slot_ids(
-                        [(mi, int(e)) for e in idx_np[i]])
-                x = self._expert(h, w.astype(x.dtype),
-                                 jnp.asarray(slot_idx), self.slots.w_gate,
-                                 self.slots.w_up, self.slots.w_down,
-                                 lp["moe"].get("shared"), x)
-                for key in pinned:
-                    self.cache.unpin(key)
-                self.tracker.advance(self.layer_compute_s)
+                x, gts = self._moe_units(mi, lp, h, w.astype(x.dtype), x,
+                                         idx_np, n)
                 if policy is not None:
                     policy.observe_batch(rids, ts, mi, gts, embeddings)
                 for i in range(n):
@@ -301,11 +409,64 @@ class DecodeCore:
         logits = np.asarray(self._unembed(self.params, x))[:n, 0]
         self.stats.tokens += n
         self.stats.steps += 1
-        self.stats.fetch_bytes = self.slots.fetch_bytes
-        self.stats.sim_stall_s = self.tracker.stall_s
-        self.stats.blocking_stall_s = self.slots.sim_fetch_s
-        self.stats.overlapped_s = self.tracker.overlapped_s
+        self._sync_stats()
         return logits, caches, experts_out
+
+    # ------------------------------------------------------------------
+    def prefill_chunk(self, caches, table: np.ndarray, t0: int,
+                      tokens: Sequence[int],
+                      policy: Optional[PerRequestPolicy], rid: int):
+        """One prompt chunk of a single request through the paged stack.
+
+        tokens sit at absolute positions t0..t0+len(tokens)-1; ``table``
+        (W,) int32 must already cover the last of them. The chunk is padded
+        to a power-of-two bucket (compiled once per bucket, like decode
+        padding buckets); per-token math is identical to feeding the same
+        tokens one-by-one through the decode path, so chunked prefill keeps
+        token-identical streams. Returns (logits (len(tokens), V) f32,
+        caches).
+        """
+        assert self.chunk_prefill_ok, \
+            "chunked prefill needs a global/mla-only stack"
+        cfg = self.cfg
+        n = len(tokens)
+        assert 0 < n <= self.max_prefill_chunk
+        cb = bucket_size(n, self.max_prefill_chunk)
+        ts = list(range(t0, t0 + n))
+        toks_p = jnp.asarray(list(tokens) + [0] * (cb - n), jnp.int32)
+        tab = jnp.asarray(table, jnp.int32)
+        embeddings = self._tok_emb_np[np.asarray(tokens, np.int64)]
+
+        x = self._embed_seq(self.params["tok_emb"], toks_p)      # (1,cb,D)
+        self._submit_prefetch(policy, [rid], [t0], self._next_moe(0))
+        for li in range(cfg.num_layers):
+            lp = self.layers[li]
+            x, caches[li] = self._paged_prefill(lp, x, caches[li], tab, t0,
+                                                n, kind=self.kinds[li])
+            self.tracker.advance(self.layer_compute_s)
+            if li in self.moe_index:
+                mi = self.moe_index[li]
+                h, w, idx = self._router(lp, x)                 # (1,cb,...)
+                idx_np = np.asarray(idx)[0]                     # (cb, k)
+                # chunk tokens become the expert units: same gather path,
+                # same pinning discipline as decode lanes
+                hu = h[0][:, None, :]
+                wu = w[0][:, None, :].astype(x.dtype)
+                xu = x[0][:, None, :]
+                xu, gts = self._moe_units(mi, lp, hu, wu, xu, idx_np, n)
+                x = xu[:, 0, :][None]
+                if policy is not None:
+                    policy.observe_batch([rid] * n, ts, mi, gts, embeddings)
+                self._submit_prefetch(policy, [rid], [t0 + n - 1],
+                                      self._next_moe(li + 1))
+            elif "ffn" in lp:
+                x = self._dense_ffn(lp, x)
+        logits = np.asarray(self._unembed(self.params, x))[0, :n]
+        self.stats.tokens += n
+        self.stats.prefill_tokens += n
+        self.stats.prefill_chunks += 1
+        self._sync_stats()
+        return logits, caches
 
 
 class OffloadEngine:

@@ -1,0 +1,207 @@
+"""Paged KV-cache block pool (vLLM-style) for the serving engines.
+
+The KV cache is carved into fixed-size blocks of ``block_size`` token
+positions; every attention layer's pool tensor shares ONE block-id space, so
+allocating block ``b`` for a request reserves position storage in *every*
+layer at once. A request owns an ordered :class:`BlockTable` — logical block
+``i`` of the table covers absolute positions ``[i*block_size,
+(i+1)*block_size)`` — and grows it lazily as its sequence advances, so device
+memory high-water scales with the *sum of actual sequence lengths* rather
+than ``batch × cache_len``.
+
+Block id 0 is reserved as the **scratch block**: padding lanes of a bucketed
+decode/prefill step scatter their (discarded) K/V there, exactly like the
+scratch KV row of the contiguous path, so jitted scatters stay shape-stable
+and never touch a live request's blocks.
+
+Admission control is reservation-based: the scheduler calls
+:meth:`KVBlockPool.try_reserve` with a request's worst-case block count
+before admitting it, which guarantees that lazy growth during decode can
+never fail mid-request (no preemption needed). ``PoolStats`` tracks
+allocation traffic, the high-water mark, and admission failures — the
+fragmentation/memory numbers ``benchmarks/engine_bench.py --mixed`` reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+SCRATCH_BLOCK = 0
+
+
+def blocks_for(num_positions: int, block_size: int) -> int:
+    """Blocks needed to cover ``num_positions`` token positions."""
+    return max(0, -(-num_positions // block_size))
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    failed_reserves: int = 0     # admission attempts refused for lack of blocks
+    high_water: int = 0          # max blocks simultaneously in use
+
+    def utilization(self, num_blocks: int) -> float:
+        """Peak fraction of allocatable blocks ever in use."""
+        return self.high_water / max(num_blocks, 1)
+
+
+class KVBlockPool:
+    """Fixed-capacity pool of KV blocks with refcounts and reservations.
+
+    ``num_blocks`` counts every block including the reserved scratch block 0,
+    so ``num_blocks - 1`` blocks are allocatable. Refcounts support sharing a
+    block between requests (e.g. a common prompt prefix); ``free`` drops one
+    reference and only returns the block to the free list at zero.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 2, "need at least one block beyond scratch"
+        assert block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list: recently-freed blocks are reused first, which keeps
+        # the touched pool region small under steady-state churn
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._ref: dict[int, int] = {}
+        self._reserved = 0
+        self.stats = PoolStats()
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return len(self._ref)
+
+    @property
+    def reserved(self) -> int:
+        return self._reserved
+
+    @property
+    def available(self) -> int:
+        """Blocks neither allocated nor promised to an admitted request."""
+        return self.num_free - self._reserved
+
+    def try_reserve(self, n: int) -> bool:
+        """Promise ``n`` future allocations (admission control). Reserved
+        blocks are drawn down by ``alloc(reserved=True)`` as the request's
+        table grows and returned by ``unreserve`` on retire."""
+        if n < 0:
+            raise ValueError(f"cannot reserve {n} blocks")
+        if self.available < n:
+            self.stats.failed_reserves += 1
+            return False
+        self._reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        if n > self._reserved:
+            raise RuntimeError(
+                f"unreserve({n}) exceeds outstanding reservation "
+                f"{self._reserved}")
+        self._reserved -= n
+
+    # -- alloc/free --------------------------------------------------------
+    def alloc(self, reserved: bool = False) -> int:
+        """Allocate one block (refcount 1). ``reserved=True`` consumes one
+        unit of a prior reservation instead of the open capacity."""
+        if reserved:
+            if self._reserved <= 0:
+                raise RuntimeError("alloc(reserved=True) with no reservation")
+            self._reserved -= 1
+        elif self.available <= 0:
+            raise RuntimeError(
+                f"KV block pool exhausted: {self.num_blocks - 1} blocks, "
+                f"{self._reserved} reserved — admit fewer requests or grow "
+                "the pool")
+        if not self._free:
+            raise RuntimeError("KV block pool exhausted")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        self.stats.allocs += 1
+        self.stats.high_water = max(self.stats.high_water, len(self._ref))
+        return bid
+
+    def retain(self, bid: int) -> None:
+        """Add a reference to an allocated block (prefix sharing)."""
+        if bid not in self._ref:
+            raise RuntimeError(f"retain of unallocated block {bid}")
+        self._ref[bid] += 1
+
+    def free(self, bid: int) -> None:
+        """Drop one reference; the block returns to the free list at zero.
+        Freeing an unallocated block raises (double-free guard)."""
+        if bid not in self._ref:
+            raise RuntimeError(f"double free of block {bid}")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            self._free.append(bid)
+            self.stats.frees += 1
+
+    def check_leaks(self) -> None:
+        """Invariant check: every block is either free or refcounted, and
+        scratch is never handed out."""
+        assert SCRATCH_BLOCK not in self._ref
+        assert SCRATCH_BLOCK not in self._free
+        overlap = set(self._free) & set(self._ref)
+        assert not overlap, f"blocks both free and in use: {overlap}"
+        total = len(self._free) + len(self._ref)
+        assert total == self.num_blocks - 1, (
+            f"leak: {self.num_blocks - 1 - total} blocks unaccounted for")
+        assert 0 <= self._reserved <= self.num_free
+
+
+class BlockTable:
+    """Ordered per-request block list; logical block ``i`` covers positions
+    ``[i*block_size, (i+1)*block_size)``. Grows lazily via :meth:`ensure`,
+    drawing on the request's admission reservation first."""
+
+    def __init__(self, pool: KVBlockPool, reserved_blocks: int = 0):
+        self.pool = pool
+        self.ids: List[int] = []
+        self._reserved = reserved_blocks
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    @property
+    def num_positions(self) -> int:
+        return len(self.ids) * self.pool.block_size
+
+    @property
+    def reserved(self) -> int:
+        """Blocks still promised to this request but not yet allocated."""
+        return self._reserved
+
+    def ensure(self, pos: int) -> None:
+        """Grow the table to cover absolute position ``pos``."""
+        need = pos // self.pool.block_size + 1
+        while len(self.ids) < need:
+            use_res = self._reserved > 0
+            self.ids.append(self.pool.alloc(reserved=use_res))
+            if use_res:
+                self._reserved -= 1
+
+    def padded(self, width: int):
+        """int32 array of ``width`` block ids, scratch-padded — the shape-
+        stable table row jitted paged attention consumes."""
+        import numpy as np
+        if len(self.ids) > width:
+            raise ValueError(
+                f"table has {len(self.ids)} blocks > padded width {width}")
+        out = np.full((width,), SCRATCH_BLOCK, np.int32)
+        out[: len(self.ids)] = self.ids
+        return out
+
+    def release(self) -> None:
+        """Free all blocks and return any unused reservation."""
+        for bid in self.ids:
+            self.pool.free(bid)
+        self.ids = []
+        if self._reserved:
+            self.pool.unreserve(self._reserved)
+            self._reserved = 0

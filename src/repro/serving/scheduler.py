@@ -1,19 +1,29 @@
-"""Continuous-batching scheduler + multi-request async-prefetch engine.
+"""Continuous-batching scheduler + multi-request paged serving engine.
 
 ``BatchedOffloadEngine`` decodes up to ``max_batch`` requests per step
 through the shared ``DecodeCore`` (serving/engine.py): one ExpertCache /
-slot buffer serves every in-flight request, prediction state is per
-request (core.policies.PerRequestPolicy), and each step's needed experts
-are pinned so one lane's demand fetch can never evict another lane's
-in-use expert. Admission is greedy: a finished request frees its KV-cache
-row and the next queued request takes it on the following step, so the
-batch stays full under load (the ROADMAP's heavy-traffic serving shape).
+slot buffer serves every in-flight request, prediction state is per request
+(core.policies.PerRequestPolicy), and each step's needed experts are pinned
+so one lane's demand fetch can never evict another lane's in-use expert.
+
+The decode path is built around **block tables** (serving/kvpool.py): KV
+lives in a shared block-paged pool, a request is admitted when enough
+*blocks* can be reserved for its worst case (not a whole ``cache_len`` row),
+its table grows lazily as it decodes, and its blocks return to the pool on
+retire — so KV memory high-water scales with the sum of actual sequence
+lengths. Prompts are absorbed by **chunked prefill**: power-of-two-bucketed
+chunks run through the jitted prefill program interleaved with decode steps,
+and the policy's predictions during prefill warm the ExpertCache before the
+first decode token. ``paged=False`` keeps the PR-1 row path (fixed-length
+KV rows, prompts streamed token-by-token through decode) as the contiguous
+fallback and benchmark baseline.
 
 Per-request token streams are identical to the batch-1 ``OffloadEngine``
-— tests pin batched-vs-batch-1 parity at full capacity.
+— tests pin paged-vs-batch-1 parity across ragged prompt lengths.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
@@ -22,6 +32,7 @@ import numpy as np
 
 from repro.core.policies import PerRequestPolicy, Policy
 from repro.serving.engine import DecodeCore, EngineStats, sample_token
+from repro.serving.kvpool import BlockTable, KVBlockPool, blocks_for
 
 
 @dataclass
@@ -35,8 +46,13 @@ class Request:
     t: int = 0                 # decode steps completed == position
     cur: int = 0               # token to feed on the next step
     n_total: int = 0           # total steps this request will run
+    prefill_end: int = 0       # positions absorbed by chunked prefill
     generated: List[int] = field(default_factory=list)
     rng: Optional[np.random.Generator] = None
+    table: Optional[BlockTable] = None
+    lane: int = -1             # row for bounded per-row state
+    admit_s: float = 0.0       # perf_counter at admission
+    first_token_s: float = -1.0  # perf_counter at first sampled token
 
     def start(self, cache_len: int) -> None:
         self.t = 0
@@ -54,10 +70,16 @@ class Request:
         else:
             self.cur = sample_token(logits, self.temperature, self.rng)
             self.generated.append(self.cur)
+            if self.first_token_s < 0:
+                self.first_token_s = time.perf_counter()
 
     @property
     def done(self) -> bool:
         return self.t >= self.n_total
+
+    @property
+    def prefilling(self) -> bool:
+        return self.t < self.prefill_end
 
 
 PolicySpec = Union[None, Policy, Callable[[], Policy]]
@@ -68,29 +90,72 @@ class BatchedOffloadEngine:
 
     policy: None, a *stateless* Policy shared across requests, or a
     zero-arg factory building one Policy per admitted request.
+
+    paged=True (default) pages the KV cache into ``block_size``-position
+    blocks and absorbs prompts via chunked prefill (``prefill_chunk`` tokens
+    per chunk, clamped so a chunk can never pin more than ``capacity``
+    experts). ``kv_blocks`` bounds the pool (None -> worst case for
+    ``max_batch`` full-length requests, plus the scratch block); a smaller
+    pool admits by block availability instead. paged=False keeps the
+    contiguous fixed-row engine.
     """
 
     def __init__(self, model, params, policy: PolicySpec, capacity: int,
                  eviction: str = "lru", host_bw: float = 100e9,
                  expert_backend: str = "jnp", max_batch: int = 4,
-                 layer_compute_s: float = 0.0):
+                 layer_compute_s: float = 0.0, paged: bool = True,
+                 block_size: int = 8, kv_blocks: Optional[int] = None,
+                 prefill_chunk: int = 8):
         need = max_batch * model.cfg.moe.top_k
         if capacity < need:
             raise ValueError(
                 f"capacity {capacity} < max_batch*top_k = {need}: a single "
                 "step could pin more experts than the cache holds")
+        # a prefill chunk pins up to chunk*top_k experts — clamp it to the
+        # same bound the decode batch obeys
+        self.prefill_chunk = max(1, min(prefill_chunk,
+                                        capacity // model.cfg.moe.top_k))
         self.core = DecodeCore(model, params, capacity, eviction, host_bw,
                                expert_backend, max_batch=max_batch,
-                               layer_compute_s=layer_compute_s)
+                               layer_compute_s=layer_compute_s,
+                               max_prefill_chunk=self.prefill_chunk)
         self.cfg = self.core.cfg
         self.max_batch = max_batch
+        self.paged = paged and self.core.paged_ok
+        self.block_size = block_size
+        self.kv_blocks = kv_blocks
+        self.pool: Optional[KVBlockPool] = None
+        self.kv_block_bytes = 0          # device bytes per block, set by run
         self._policy = None if policy is None else PerRequestPolicy(policy)
         self._queue: deque[Request] = deque()
+        self._ttft: Dict[int, float] = {}
         self._next_rid = 0
 
     @property
     def stats(self) -> EngineStats:
         return self.core.stats
+
+    def ttft(self) -> Dict[int, float]:
+        """Admission-to-first-token seconds per request retired by the
+        latest ``run`` (requests truncated before their first sampled
+        token are absent)."""
+        return dict(self._ttft)
+
+    def _record_ttft(self, req: Request) -> None:
+        if req.first_token_s >= 0:
+            self._ttft[req.rid] = req.first_token_s - req.admit_s
+
+    @property
+    def kv_high_water_bytes(self) -> int:
+        """Peak *logical* KV working set (blocks in use × bytes/block).
+
+        The pool tensors themselves are allocated at ``kv_blocks`` size up
+        front; this metric tells you how small ``kv_blocks`` could have
+        been for this workload — the device saving is realised by setting
+        ``kv_blocks`` below the ``max_batch × cache_len`` worst case."""
+        if self.pool is None:
+            return 0
+        return self.pool.stats.high_water * self.kv_block_bytes
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new: int,
@@ -102,8 +167,15 @@ class BatchedOffloadEngine:
         return rid
 
     def run(self, cache_len: int) -> Dict[int, List[int]]:
-        """Drain the queue: admit up to max_batch requests, decode one
-        batched step, retire finished requests into freed rows."""
+        self._ttft.clear()             # ttft() reports the latest run only
+        if self.paged:
+            return self._run_paged(cache_len)
+        return self._run_rows(cache_len)
+
+    # ------------------------------------------------------------------
+    def _run_rows(self, cache_len: int) -> Dict[int, List[int]]:
+        """Contiguous fallback: fixed-length KV rows, prompts streamed
+        token-by-token through the decode path (the PR-1 engine)."""
         caches = self.core.alloc_caches(cache_len)
         rows: List[Optional[Request]] = [None] * self.max_batch
         results: Dict[int, List[int]] = {}
@@ -112,6 +184,7 @@ class BatchedOffloadEngine:
                 if rows[s] is None and self._queue:
                     req = self._queue.popleft()
                     req.start(cache_len)
+                    req.admit_s = time.perf_counter()
                     rows[s] = req
                     if self._policy is not None:
                         self._policy.begin_request(req.rid)
@@ -127,11 +200,108 @@ class BatchedOffloadEngine:
                 r.feed_result(lg)
                 if r.done:
                     results[r.rid] = r.generated
+                    self._record_ttft(r)
                     rows[s] = None
                     if self._policy is not None:
                         self._policy.end_request(r.rid)
         return results
 
+    # ------------------------------------------------------------------
+    def _admit_paged(self, lanes: List[Optional[Request]], cache_len: int,
+                     results: Dict[int, List[int]]) -> None:
+        """Admit while a lane is free AND the pool can reserve the request's
+        worst-case block count — block-granular admission, no preemption."""
+        for lane in range(self.max_batch):
+            if lanes[lane] is not None or not self._queue:
+                continue
+            req = self._queue[0]
+            n_total = min(len(req.prompt) + req.max_new, cache_len)
+            need = blocks_for(n_total, self.block_size)
+            if need > self.pool.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.rid} needs {need} KV blocks but the pool "
+                    f"holds {self.pool.num_blocks - 1}: raise kv_blocks or "
+                    "lower cache_len")
+            if not self.pool.try_reserve(need):
+                break                                # FIFO: don't starve
+            self._queue.popleft()
+            req.start(cache_len)
+            req.admit_s = time.perf_counter()
+            req.table = BlockTable(self.pool, need)
+            req.lane = lane
+            # positions a prefill program may absorb: everything up to (not
+            # including) the position whose logits the first sample needs
+            req.prefill_end = (min(len(req.prompt) - 1, req.n_total)
+                               if self.core.chunk_prefill_ok else 0)
+            lanes[lane] = req
+            if self._policy is not None:
+                self._policy.begin_request(req.rid)
+            if req.prefill_end == 0 and req.done:
+                # degenerate: cache_len admits zero steps
+                self._retire(lanes, req, results)
+
+    def _retire(self, lanes, req: Request, results) -> None:
+        results[req.rid] = req.generated
+        self._record_ttft(req)
+        req.table.release()
+        lanes[req.lane] = None
+        if self._policy is not None:
+            self._policy.end_request(req.rid)
+
+    def _run_paged(self, cache_len: int) -> Dict[int, List[int]]:
+        bs = self.block_size
+        table_width = blocks_for(cache_len, bs)
+        num_blocks = (self.kv_blocks if self.kv_blocks is not None
+                      else self.max_batch * table_width + 1)
+        self.pool = KVBlockPool(num_blocks, bs)
+        caches = self.core.alloc_paged_caches(num_blocks, bs)
+        self.kv_block_bytes = self.core.paged_block_bytes(caches)
+        lanes: List[Optional[Request]] = [None] * self.max_batch
+        results: Dict[int, List[int]] = {}
+
+        while self._queue or any(r is not None for r in lanes):
+            self._admit_paged(lanes, cache_len, results)
+
+            # one prefill chunk per prefilling request, interleaved with the
+            # decode step below — policy predictions submitted during these
+            # chunks warm the ExpertCache before the first decode token
+            for req in [r for r in lanes if r is not None and r.prefilling]:
+                n = min(self.prefill_chunk, req.prefill_end - req.t)
+                req.table.ensure(req.t + n - 1)
+                chunk = req.prompt[req.t: req.t + n]
+                _, caches = self.core.prefill_chunk(
+                    caches, req.table.padded(table_width), req.t, chunk,
+                    self._policy, req.rid)
+                req.t += n
+                if not req.prefilling:
+                    if req.t >= req.n_total:         # truncated by cache_len
+                        self._retire(lanes, req, results)
+                    else:
+                        req.cur = int(req.prompt[req.t])
+
+            active = [r for r in lanes
+                      if r is not None and not r.prefilling]
+            if not active:
+                continue
+            for r in active:
+                r.table.ensure(r.t)
+            tables = np.stack([r.table.padded(table_width) for r in active])
+            logits, caches, _ = self.core.step(
+                caches,
+                rows=[r.lane for r in active],
+                pos=[r.t for r in active],
+                tokens=[r.cur for r in active],
+                policy=self._policy,
+                rids=[r.rid for r in active],
+                tables=tables)
+            for r, lg in zip(active, logits):        # retire frees blocks
+                r.feed_result(lg)
+                if r.done:
+                    self._retire(lanes, r, results)
+        self.pool.check_leaks()
+        return results
+
+    # ------------------------------------------------------------------
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int,
                  cache_len: int, temperature: float = 0.0,
                  seeds: Optional[Sequence[int]] = None) -> List[List[int]]:

@@ -192,3 +192,36 @@ def test_policy_predict_batch_default():
 def test_bucket_size():
     assert [bucket_size(n, 8) for n in (1, 2, 3, 4, 5, 8)] == \
         [1, 2, 4, 4, 8, 8]
+
+
+def test_online_policy_vectorised_predict_batch():
+    """PerRequestPolicy serves OnlineMoEBeyondPolicy instances with ONE
+    cross-request predictor forward; results match the scalar path."""
+    import jax
+
+    from repro.configs.base import PredictorConfig
+    from repro.core.policies import OnlineMoEBeyondPolicy, PerRequestPolicy
+    from repro.core.predictor import predictor_init
+
+    pc = PredictorConfig(token_emb_dim=16, num_model_layers=3, num_experts=8,
+                         layer_emb_dim=8, d_model=16, num_layers=2,
+                         num_heads=2, d_ff=32, max_seq=16, top_k=3)
+    pp = predictor_init(jax.random.PRNGKey(0), pc)
+    prp = PerRequestPolicy(lambda: OnlineMoEBeyondPolicy(pp, pc, width=3))
+    rng = np.random.default_rng(0)
+    rids, lens = [0, 1, 2, 3], [5, 2, 9, 0]     # ragged histories, one empty
+    for r, n in zip(rids, lens):
+        prp.begin_request(r)
+        for t in range(n):
+            prp._get(r).observe(t, 0, [1],
+                                rng.normal(size=16).astype(np.float32))
+    pols = [prp._get(r) for r in rids]
+    assert OnlineMoEBeyondPolicy.batchable(pols)
+    batched = prp.predict_batch(rids, lens, layer=1)
+    scalar = [p.predict(t, 1) for p, t in zip(pols, lens)]
+    for i, (b, s) in enumerate(zip(batched, scalar)):
+        assert sorted(b.tolist()) == sorted(s.tolist()), f"request {i}"
+    assert batched[3].size == 0                 # no observations yet
+    # mixed-policy batches fall back to the scalar loop
+    assert not OnlineMoEBeyondPolicy.batchable(
+        pols[:1] + [NoPrefetchPolicy()])

@@ -93,6 +93,31 @@ def test_prefetch_counts():
     assert c.stats.demand_fetches == 1
 
 
+def test_reprefetch_is_noop_hit():
+    """Regression: re-prefetching a resident key must not count as a fresh
+    insert, touch slot callbacks, or change provenance — but it DOES
+    refresh recency (intent-to-use eviction protection)."""
+    fills = []
+    c = ExpertCache(2, "lru", on_insert=fills.append)
+    c.prefetch(["a"])
+    c.prefetch(["a", "a"])
+    assert c.stats.prefetches == 1
+    assert c.stats.redundant_prefetches == 2
+    assert fills == ["a"]                  # the slot was filled exactly once
+    # provenance survives a re-prefetch of a demand-fetched entry
+    c.access("b")                          # miss -> demand insert
+    c.prefetch(["b"])
+    assert c.stats.redundant_prefetches == 3
+    assert c.access("b")
+    assert c.stats.prefetch_hits == 0      # still counted as a demand entry
+    # recency IS refreshed: a re-prefetch declares intent-to-use, so the
+    # key survives the next eviction instead of the older resident
+    c.prefetch(["a"])
+    c.access("d")                          # evicts b (oldest), not a
+    assert "a" in c and "b" not in c and "d" in c
+    assert c.stats.prefetches == 1         # still exactly one real insert
+
+
 # ------------------------------------------------------------------- metrics
 def test_select_experts_topk_threshold():
     logits = np.array([[4.0, 3.0, -5.0, 0.2, -0.2]])

@@ -1,0 +1,140 @@
+"""KVBlockPool: alloc/free/refcount/reservation invariants.
+
+The hypothesis property test drives random interleavings of request
+lifetimes (reserve -> grow -> release) against one pool and asserts no
+interleaving can double-free or leak a block; it skips cleanly when
+hypothesis isn't installed (CI installs it)."""
+import pytest
+
+from repro.serving.kvpool import (SCRATCH_BLOCK, BlockTable, KVBlockPool,
+                                  blocks_for)
+
+
+def test_blocks_for():
+    assert [blocks_for(n, 4) for n in (0, 1, 4, 5, 8, 9)] == \
+        [0, 1, 1, 2, 2, 3]
+
+
+def test_alloc_free_refcount():
+    p = KVBlockPool(4, block_size=2)          # 3 allocatable + scratch
+    a = p.alloc()
+    b = p.alloc()
+    assert a != b and SCRATCH_BLOCK not in (a, b)
+    assert p.blocks_in_use == 2 and p.num_free == 1
+    p.retain(a)
+    p.free(a)                                  # refcount 2 -> 1: still held
+    assert p.blocks_in_use == 2
+    p.free(a)
+    assert p.blocks_in_use == 1 and p.num_free == 2
+    with pytest.raises(RuntimeError, match="double free"):
+        p.free(a)
+    with pytest.raises(RuntimeError, match="unallocated"):
+        p.retain(a)
+    p.free(b)
+    p.check_leaks()
+    assert p.stats.allocs == 2 and p.stats.frees == 2
+    assert p.stats.high_water == 2
+
+
+def test_pool_exhaustion_and_reservation():
+    p = KVBlockPool(4, block_size=2)
+    assert p.try_reserve(2)
+    assert p.available == 1
+    assert not p.try_reserve(2)                # only 1 unpromised block left
+    assert p.stats.failed_reserves == 1
+    p.alloc()                                  # unreserved alloc uses the 1
+    with pytest.raises(RuntimeError, match="exhausted"):
+        p.alloc()                              # rest is promised elsewhere
+    assert p.alloc(reserved=True) is not None  # promised capacity still works
+    p.unreserve(1)
+    with pytest.raises(RuntimeError):
+        p.unreserve(1)
+
+
+def test_block_table_growth_and_release():
+    p = KVBlockPool(6, block_size=4)
+    assert p.try_reserve(2)                    # admission promises 2 blocks
+    t = BlockTable(p, reserved_blocks=2)
+    t.ensure(0)
+    assert len(t) == 1 and t.num_positions == 4
+    t.ensure(3)                                # same block
+    assert len(t) == 1
+    t.ensure(11)                               # grows to 3 blocks: 2 from
+    assert len(t) == 3                         # the reservation, 1 open
+    assert p.reserved == 0
+    padded = t.padded(5)
+    assert padded.tolist()[:3] == t.ids and set(padded[3:]) == {SCRATCH_BLOCK}
+    with pytest.raises(ValueError):
+        t.padded(2)
+    t.release()
+    p.check_leaks()
+    assert p.num_free == 5 and p.blocks_in_use == 0
+
+
+def test_block_table_scratch_never_allocated():
+    p = KVBlockPool(8, block_size=1)
+    t = BlockTable(p)
+    t.ensure(6)
+    assert SCRATCH_BLOCK not in t.ids
+    t.release()
+
+
+# ---------------------------------------------------------------------------
+# property test: no interleaving of alloc/free/grow double-frees or leaks
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    # a program is a sequence of (request_slot, op) actions over 4 slots
+    ACTIONS = st.lists(
+        st.tuples(st.integers(0, 3),
+                  st.sampled_from(["admit", "grow", "grow_big", "release"])),
+        min_size=1, max_size=60)
+
+    def hyp_property(f):
+        return settings(max_examples=200, deadline=None)(given(
+            actions=ACTIONS, num_blocks=st.integers(2, 24),
+            block_size=st.integers(1, 8))(f))
+else:
+    def hyp_property(f):                         # hypothesis optional locally
+        return pytest.mark.skip(reason="hypothesis not installed")(f)
+
+
+@hyp_property
+def test_pool_never_double_frees_or_leaks(actions, num_blocks, block_size):
+    pool = KVBlockPool(num_blocks, block_size)
+    tables = {}
+    pos = {}
+    for slot, op in actions:
+        if op == "admit" and slot not in tables:
+            need = min(2, pool.available)
+            if pool.try_reserve(need):
+                tables[slot] = BlockTable(pool, need)
+                pos[slot] = 0
+        elif op in ("grow", "grow_big") and slot in tables:
+            step = block_size if op == "grow" else 3 * block_size
+            target = pos[slot] + step
+            need = blocks_for(target + 1, block_size) - len(tables[slot])
+            # grow only when the pool can actually serve it (the scheduler's
+            # reservation discipline guarantees this in the engine)
+            if need <= tables[slot].reserved + pool.available:
+                tables[slot].ensure(target)
+                pos[slot] = target
+        elif op == "release" and slot in tables:
+            tables[slot].release()
+            del tables[slot], pos[slot]
+        # global invariants hold after EVERY action
+        pool.check_leaks()
+        held = sum(len(t) for t in tables.values())
+        assert held == pool.blocks_in_use
+        assert pool.num_free + pool.blocks_in_use == num_blocks - 1
+    for t in tables.values():
+        t.release()
+    pool.check_leaks()
+    assert pool.blocks_in_use == 0 and pool.reserved == 0
+    assert pool.num_free == num_blocks - 1
