@@ -13,6 +13,14 @@ high-water (actual blocks allocated vs the contiguous batch x cache_len
 model):
   PYTHONPATH=src python -m benchmarks.engine_bench --tiny --mixed \
       --out artifacts/engine_bench_mixed.json
+
+Long-context mode (--longctx): sweeps simulated cache length and times one
+batched decode step through the paged pools on the flash-decode kernel
+route vs the gather-and-materialise route, reporting per-step latency,
+modeled KV bytes read, and the (N, W*block_size, ...) bytes only the gather
+route materialises:
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --longctx \
+      --out artifacts/engine_bench_longctx.json
 """
 from __future__ import annotations
 
@@ -129,6 +137,11 @@ def _mixed_latency(model, params, cfg, prompts, max_new: int, cache_len: int,
         f"{paged_bytes / 2**10:.0f}KiB paged vs {rows_bytes / 2**10:.0f}KiB "
         f"batch*cache_len rows "
         f"({paged_bytes / max(rows_bytes, 1):.2f}x)")
+    # prompt tokens each engine streamed token-by-token through decode:
+    # ~every prompt body on the token path, none on the chunk-prefill path
+    # (ring/recurrent stacks would show up here even with paged=True)
+    log(f"  fallback prefill tokens: {tok.stats.fallback_prefill_tokens} "
+        f"token-path vs {pag.stats.fallback_prefill_tokens} paged+chunked")
     return {
         "ttft_token_mean_s": tok_tt["mean"],
         "ttft_token_p50_s": tok_tt["p50"],
@@ -145,8 +158,144 @@ def _mixed_latency(model, params, cfg, prompts, max_new: int, cache_len: int,
         "kv_blocks_high_water": pag.pool.stats.high_water,
         "prefill_chunks": pag.stats.prefill_chunks - chunks0,
         "prefill_tokens": pag.stats.prefill_tokens - ptok0,
+        "fallback_prefill_tokens_token_path": tok.stats.fallback_prefill_tokens,
+        "fallback_prefill_tokens_paged": pag.stats.fallback_prefill_tokens,
         "streams_identical": True,
     }
+
+
+def _longctx_sweep(model, params, cfg, lengths, batch: int, block_size: int,
+                   iters: int, log=print):
+    """Per-step decode latency vs cache length: paged flash-decode kernel
+    route vs the gather-and-materialise route, same paged pools, same
+    tables. ``step_s_*`` is the whole decode step (all layers + the MoE
+    host loop — includes an O(cache) pool-copy both routes pay off-TPU,
+    where XLA can't donate the cache buffers); ``attn_s_*`` times one paged
+    attention layer's jitted program, the read path this comparison is
+    about. Bytes are modeled from the cache shapes: both routes read every
+    live page; only the gather route also materialises (and re-reads) the
+    contiguous (N, W*block_size, ...) per-lane copy. (Off-TPU the kernel
+    route is the lax.scan twin, whose live tile is capped at
+    ``JNP_TILE_BLOCKS`` blocks — equal to the full copy while the table
+    fits one tile, constant past it; ``materialized_bytes_kernel = 0``
+    models the Pallas kernel the TPU route compiles.)"""
+    import jax.numpy as jnp
+
+    from repro.core.tracing import moe_layer_ids
+    from repro.models import transformer as T
+    from repro.serving.engine import DecodeCore
+    from repro.serving.kvpool import blocks_for
+
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    cores = {
+        "kernel": DecodeCore(model, params, n_total, max_batch=batch,
+                             kernel="auto"),
+        "gather": DecodeCore(model, params, n_total, max_batch=batch,
+                             kernel=None),
+    }
+    li = next(i for i, k in enumerate(cfg.layer_kinds())
+              if k in T.PAGED_KINDS)
+    kind = cfg.layer_kinds()[li]
+    rng = np.random.default_rng(0)
+    rows = []
+    log(f"  longctx batch={batch} block_size={block_size}: cache_len,"
+        "step_ms_kernel,step_ms_gather,attn_ms_kernel,attn_ms_gather,"
+        "read_MiB,gather_materialized_MiB (kernel route materialises 0)")
+    for cache_len in lengths:
+        w = blocks_for(cache_len, block_size)
+        num_blocks = batch * w + 1
+        tables = np.stack([1 + i * w + np.arange(w) for i in range(batch)]
+                          ).astype(np.int32)
+        pos = [cache_len - 1] * batch
+        toks = [1] * batch
+        lanes = list(range(batch))
+        row = {"cache_len": cache_len}
+        route_caches = {}
+        for name, core in cores.items():
+            route_caches[name] = core.alloc_paged_caches(num_blocks,
+                                                         block_size)
+            block_bytes = core.paged_block_bytes(route_caches[name])
+            core.step(route_caches[name], lanes, pos, toks, None, lanes,
+                      tables=tables)                              # warm/jit
+        # interleave routes so machine drift hits both equally
+        acc = {name: 0.0 for name in cores}
+        for _ in range(iters):
+            for name, core in cores.items():
+                t0 = time.perf_counter()
+                core.step(route_caches[name], lanes, pos, toks, None, lanes,
+                          tables=tables)
+                acc[name] += time.perf_counter() - t0
+        for name in cores:
+            row[f"step_s_{name}"] = acc[name] / iters
+
+        # isolate the read path: one paged layer's jitted attention program
+        x = jnp.asarray(rng.normal(size=(batch, 1, cfg.d_model)),
+                        jnp.dtype(cfg.dtype))
+        tab_j = jnp.asarray(tables)
+        pos_j = jnp.full((batch,), cache_len - 1, jnp.int32)
+        attn_iters = 4 * iters
+        for name, core in cores.items():
+            lp = core.layers[li]
+            cache = route_caches[name][li]
+            core._paged_attn(lp, x, cache, tab_j, pos_j, kind=kind,
+                             kernel=core.kernel)[0].block_until_ready()
+        acc = {name: 0.0 for name in cores}
+        for _ in range(attn_iters):
+            for name, core in cores.items():
+                lp = core.layers[li]
+                cache = route_caches[name][li]
+                t0 = time.perf_counter()
+                core._paged_attn(lp, x, cache, tab_j, pos_j, kind=kind,
+                                 kernel=core.kernel)[0].block_until_ready()
+                acc[name] += time.perf_counter() - t0
+        for name in cores:
+            row[f"attn_s_{name}"] = acc[name] / attn_iters
+
+        kv_read = batch * w * block_bytes
+        row["kv_read_bytes"] = kv_read
+        row["materialized_bytes_gather"] = kv_read
+        row["materialized_bytes_kernel"] = 0
+        rows.append(row)
+        log(f"  {cache_len},{row['step_s_kernel'] * 1e3:.1f},"
+            f"{row['step_s_gather'] * 1e3:.1f},"
+            f"{row['attn_s_kernel'] * 1e3:.2f},"
+            f"{row['attn_s_gather'] * 1e3:.2f},"
+            f"{kv_read / 2**20:.1f},{kv_read / 2**20:.1f}")
+    # growth of per-step attention-read time with cache length
+    dl = max(rows[-1]["cache_len"] - rows[0]["cache_len"], 1)
+    slopes = {name: (rows[-1][f"attn_s_{name}"] - rows[0][f"attn_s_{name}"])
+              / dl for name in cores}
+    log(f"  attn-read growth: kernel {slopes['kernel'] * 1e6:.3f}us/pos, "
+        f"gather {slopes['gather'] * 1e6:.3f}us/pos "
+        f"({slopes['gather'] / max(slopes['kernel'], 1e-12):.2f}x)")
+    return {"rows": rows, "slope_s_per_pos_kernel": slopes["kernel"],
+            "slope_s_per_pos_gather": slopes["gather"],
+            "kernel_routes": {n: c.kernel for n, c in cores.items()},
+            "batch": batch, "block_size": block_size}
+
+
+def _run_longctx(lengths, iters, out_path=None, log=print):
+    """Build the untrained reduced backbone (attention timing only — parity
+    is the tests' job), run the sweep, write the artifact."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    t0 = time.time()
+    cfg = get_reduced("deepseek-v2-lite")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    results = _longctx_sweep(model, params, cfg, lengths=lengths, batch=4,
+                             block_size=16, iters=iters, log=log)
+    results["wall_s"] = time.time() - t0
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                    exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+        log(f"  wrote {out_path}")
+    return results
 
 
 def run(log=print):
@@ -192,10 +341,12 @@ def run(log=print):
     return out
 
 
-def run_tiny(out_path=None, mixed=False, log=print):
+def run_tiny(out_path=None, mixed=False, longctx=False, log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
-    ragged-length admission-latency / memory-high-water workload."""
+    ragged-length admission-latency / memory-high-water workload;
+    ``longctx`` to the cache-length sweep (kernel vs gather read path —
+    untrained weights, attention timing only)."""
     from repro.configs import get_reduced
     from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
     from repro.core.tracing import moe_layer_ids
@@ -206,6 +357,9 @@ def run_tiny(out_path=None, mixed=False, log=print):
 
     t0 = time.time()
     arch = "deepseek-v2-lite"
+    if longctx:
+        return _run_longctx(lengths=(1024, 2048, 4096, 8192), iters=5,
+                            out_path=out_path, log=log)
     params, _ = train(arch, reduced=True, steps=30, batch_size=8,
                       seq_len=64, lr=3e-3, log=log)
     cfg = get_reduced(arch)
@@ -265,14 +419,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny backbone, no cached artifacts")
-    ap.add_argument("--mixed", action="store_true",
-                    help="mixed-length workload: admission-to-first-token "
-                         "latency + KV memory high-water, paged vs token "
-                         "prompt path")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--mixed", action="store_true",
+                      help="mixed-length workload: admission-to-first-token "
+                           "latency + KV memory high-water, paged vs token "
+                           "prompt path")
+    mode.add_argument("--longctx", action="store_true",
+                      help="cache-length sweep: per-step decode latency + "
+                           "bytes read, paged flash-decode kernel vs gather")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
-    if args.tiny or args.mixed:
-        run_tiny(args.out, mixed=args.mixed)
+    if args.longctx and not args.tiny:
+        _run_longctx(lengths=(1024, 4096, 8192, 16384, 32768), iters=3,
+                     out_path=args.out)
+    elif args.tiny or args.mixed:
+        run_tiny(args.out, mixed=args.mixed, longctx=args.longctx)
     else:
         results = run()
         if args.out:

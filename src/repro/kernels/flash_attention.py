@@ -9,11 +9,14 @@ partially-filled cache).
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 NEG = -1e30
 
@@ -53,8 +56,12 @@ def _kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 @partial(jax.jit, static_argnames=("block_s", "interpret"))
 def flash_decode(q, k, v, valid_len, block_s: int = 512,
-                 interpret: bool = True):
-    """q: (H, hd); k/v: (S, KVH, hd); valid_len: i32 -> (H, hd)."""
+                 interpret: Optional[bool] = None):
+    """q: (H, hd); k/v: (S, KVH, hd); valid_len: i32 -> (H, hd).
+
+    ``interpret=None`` auto-resolves via the backend (compiled on TPU,
+    interpreted elsewhere); pass an explicit bool to override.
+    """
     s, kvh, hd = k.shape
     h = q.shape[0]
     g = h // kvh
@@ -83,6 +90,6 @@ def flash_decode(q, k, v, valid_len, block_s: int = 512,
             pltpu.VMEM((g, 1), jnp.float32),             # running sum
             pltpu.VMEM((g, hd), jnp.float32),            # output accumulator
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(vlen, qg, k, v)
     return out.reshape(h, hd)

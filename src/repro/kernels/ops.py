@@ -34,6 +34,28 @@ def flash_decode(q, k, v, valid_len, backend: str = "jnp"):
     return _flash_pallas(q, k, v, valid_len, interpret=(backend != "tpu"))
 
 
+def paged_flash_decode(q, k_pool, v_pool, tables, pos, scale=None, dv=None,
+                       backend: str = "jnp"):
+    """Paged flash-decode over a block-table KV pool.
+
+    q: (N, KVH, G, dk); pools: (num_blocks, BS, KVH, *); tables: (N, W);
+    pos: (N,). ``v_pool=None`` is the shared-page (MLA latent) layout —
+    V slices out of the K fetch, one page read. backend "jnp" runs the
+    lax.scan flash twin (the off-TPU serving route — same online-softmax
+    recurrence, no interpreter overhead); "pallas" runs the kernel body in
+    interpret mode (the CI validation route); "tpu" compiles it.
+    """
+    from repro.kernels import paged_attention as pa
+    if backend not in ("jnp", "pallas", "tpu"):
+        raise ValueError(f"unknown paged_flash_decode backend {backend!r}")
+    if backend == "jnp":
+        return pa.paged_flash_decode_jnp(q, k_pool, v_pool, tables, pos,
+                                         scale=scale, dv=dv)
+    return pa.paged_flash_decode_pallas(q, k_pool, v_pool, tables, pos,
+                                        scale=scale, dv=dv,
+                                        interpret=(backend != "tpu"))
+
+
 def ssd_chunk(c, b, xdt, a_cum, backend: str = "jnp"):
     from repro.kernels.ssd_chunk import ssd_chunk as _p, ssd_chunk_ref as _r
     if backend == "jnp":

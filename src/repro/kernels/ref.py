@@ -31,6 +31,39 @@ def expert_ffn_ref(x: jnp.ndarray, weights: jnp.ndarray, wg: jnp.ndarray,
     return jnp.einsum("k,kd->d", weights.astype(jnp.float32), y).astype(x.dtype)
 
 
+def paged_flash_decode_ref(q, k_pool, v_pool, tables, pos, scale=None,
+                           dv=None):
+    """Dense oracle for the paged flash-decode kernel: gather-and-
+    materialise every lane's pages, then one softmax over the whole row.
+
+    q: (N, KVH, G, dk); k_pool/v_pool: (num_blocks, BS, KVH, *) —
+    ``v_pool=None`` is the shared-page (MLA latent) layout, V = the first
+    ``dv`` features of K; tables: (N, W) int32 block tables; pos: (N,)
+    int32 — key positions ``> pos[lane]`` are masked.
+    Returns (N, KVH, G, dv).
+    """
+    n, kvh, g, dk = q.shape
+    bs = k_pool.shape[1]
+    w = tables.shape[1]
+    dvp = k_pool.shape[-1] if v_pool is None else v_pool.shape[-1]
+    dv = dvp if dv is None else dv
+    scale = dk ** -0.5 if scale is None else scale
+    k = jnp.take(k_pool, tables.reshape(-1), axis=0).reshape(
+        n, w * bs, kvh, dk)
+    if v_pool is None:
+        v = k[..., :dv]
+    else:
+        v = jnp.take(v_pool, tables.reshape(-1), axis=0).reshape(
+            n, w * bs, kvh, dvp)[..., :dv]
+    scores = jnp.einsum("njgd,nsjd->njgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(w * bs)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("njgs,nsjd->njgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      valid_len: jnp.ndarray | int):
     """Single-token decode attention against a KV cache.

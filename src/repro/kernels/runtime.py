@@ -1,0 +1,33 @@
+"""Kernel execution-mode helpers shared by every Pallas wrapper.
+
+Pallas kernels compile for TPU; everywhere else they run through the
+interpreter (a jitted XLA program that walks the grid), which validates the
+kernel body bit-for-bit but at interpreter speed. The helpers here centralise
+that decision so callers can say "interpret=None -> do the right thing for
+this backend" instead of hardcoding ``interpret=True``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """None -> interpret everywhere except a real TPU backend; an explicit
+    bool always wins (tests force ``interpret=True`` to pin the kernel body
+    on CPU, benchmarks force ``False`` on TPU)."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)
+
+
+def default_kernel_backend() -> str:
+    """Backend the serving hot path should compile to: the real Pallas
+    kernel on TPU, the jnp flash twin (same blockwise online softmax, no
+    interpreter overhead) elsewhere."""
+    return "tpu" if on_tpu() else "jnp"

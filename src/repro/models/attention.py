@@ -190,6 +190,12 @@ def attn_apply(p, cfg, kind, x, positions, mode, cache=None, pos=None,
 # Paged KV cache (block-table) decode path — serving/kvpool.py owns the block
 # id space; here blocks are just the leading axis of the pool tensors. The
 # contiguous row cache above remains the fallback (batch-1 engine, training).
+#
+# The *read* side has two routes: ``kernel=None`` gathers every lane's pages
+# into a contiguous (N, W*block_size, ...) copy and attends densely (the
+# parity reference), while ``kernel`` in {"jnp", "pallas", "tpu"} runs the
+# paged flash-decode kernel (kernels/paged_attention.py), which walks the
+# block table in place — no materialised copy on the hot path.
 
 def paged_init_cache(cfg, num_blocks: int, block_size: int, dtype):
     """Block-paged pool for a *global* attention layer: block b, slot s holds
@@ -232,33 +238,57 @@ def _paged_qkv(p, cfg, x, positions):
     return q, k, v
 
 
-def paged_attn_decode(p, cfg, x, cache, tables, pos):
+def _paged_kernel_attend(q, cache, tables, pos, kernel: str):
+    """Flash-decode the lanes in ``q`` through the block pool.
+
+    q: (L,H,hd) — one query token per lane; tables: (L,W); pos: (L,).
+    Returns (L,H,hd). The kernel masks positions > pos per lane, which
+    covers causality, the partially-filled last block, scratch-padded
+    table entries, and pad lanes alike.
+    """
+    from repro.kernels import ops
+    l, h, hd = q.shape
+    kvh = cache["k"].shape[2]
+    qg = q.reshape(l, kvh, h // kvh, hd)
+    out = ops.paged_flash_decode(qg, cache["k"], cache["v"], tables, pos,
+                                 backend=kernel)
+    return out.reshape(l, h, hd)
+
+
+def paged_attn_decode(p, cfg, x, cache, tables, pos, kernel=None):
     """One decode token per lane through the paged cache.
 
     x: (N,1,D); tables: (N,W) int32 block tables; pos: (N,) positions.
     Returns (y (N,1,D), new cache). Global attention only — ring-buffer
-    kinds keep their bounded per-row caches.
+    kinds keep their bounded per-row caches. ``kernel`` selects the paged
+    flash-decode backend; None keeps the gather + dense-attend reference.
     """
     bs = cache["k"].shape[1]
     q, k, v = _paged_qkv(p, cfg, x, pos[:, None])
     bids = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
     cache = _paged_scatter(cache, k[:, 0], v[:, 0], bids, pos % bs)
-    ck, cv = _paged_gather(cache, tables)
-    valid = (jnp.arange(ck.shape[1])[None, None, :]
-             <= pos[:, None, None])                        # (N,1,S)
-    out = _gqa_attend(q, ck, cv, valid, x.dtype)
+    if kernel is None:
+        ck, cv = _paged_gather(cache, tables)
+        valid = (jnp.arange(ck.shape[1])[None, None, :]
+                 <= pos[:, None, None])                    # (N,1,S)
+        out = _gqa_attend(q, ck, cv, valid, x.dtype)
+    else:
+        out = _paged_kernel_attend(q[:, 0], cache, tables, pos,
+                                   kernel)[:, None]
     y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
     return y, cache
 
 
-def paged_attn_prefill(p, cfg, x, cache, table, t0, n_valid):
+def paged_attn_prefill(p, cfg, x, cache, table, t0, n_valid, kernel=None):
     """One prompt chunk of a single request through the paged cache.
 
     x: (1,C,D) — C is the (padded) chunk bucket, the first ``n_valid``
     tokens are real and sit at absolute positions t0..t0+n_valid-1; pad
     tokens scatter to the scratch block. Per-token math is identical to
-    feeding the chunk token-by-token through ``paged_attn_decode``, so the
-    chunked-prefill stream stays token-identical to the decode path.
+    feeding the chunk token-by-token through ``paged_attn_decode`` — on the
+    kernel route each chunk token literally becomes one kernel lane sharing
+    the request's table — so the chunked-prefill stream stays
+    token-identical to the decode path.
     """
     c = x.shape[1]
     bs = cache["k"].shape[1]
@@ -271,10 +301,15 @@ def paged_attn_prefill(p, cfg, x, cache, table, t0, n_valid):
     bids = jnp.where(real, jnp.take(table, lb), 0)
     slots = jnp.where(real, p_abs % bs, 0)
     cache = _paged_scatter(cache, k[0], v[0], bids, slots)
-    ck, cv = _paged_gather(cache, table[None, :])          # (1,S,KVH,hd)
-    valid = (jnp.arange(ck.shape[1])[None, None, :]
-             <= positions[:, :, None])                     # (1,C,S)
-    out = _gqa_attend(q, ck, cv, valid, x.dtype)
+    if kernel is None:
+        ck, cv = _paged_gather(cache, table[None, :])      # (1,S,KVH,hd)
+        valid = (jnp.arange(ck.shape[1])[None, None, :]
+                 <= positions[:, :, None])                 # (1,C,S)
+        out = _gqa_attend(q, ck, cv, valid, x.dtype)
+    else:
+        lane_tables = jnp.broadcast_to(table[None, :], (c, table.shape[0]))
+        out = _paged_kernel_attend(q[0], cache, lane_tables,
+                                   positions[0], kernel)[None]
     y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
     return y, cache
 

@@ -129,56 +129,93 @@ def _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, out_dtype):
 
 # ---------------------------------------------------------------------------
 # Paged KV cache (block-table) paths — the compressed latent pages exactly
-# like K/V: block b slot s of every MLA layer's pool holds ckv/krope for the
-# absolute position a request's block table maps there. serving/kvpool.py
-# owns the block id space; block 0 is the scratch block for padding lanes.
+# like K/V: block b slot s of every MLA layer's pool holds the (c, r) latent
+# for the absolute position a request's block table maps there, stored as
+# ONE ``lat`` tensor with ckv in the first ``kv_lora_rank`` features and
+# k_rope in the rest. That layout is what lets the absorbed decode reuse the
+# paged flash-decode kernel as a single-"kv-head" attend: K is the whole
+# latent page, V is its ckv prefix — one fetch, no concat on the read path.
+# serving/kvpool.py owns the block id space; block 0 is the scratch block.
 
 def mla_paged_init_cache(cfg, num_blocks: int, block_size: int, dtype):
     m = cfg.mla
     return {
-        "ckv": jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
-        "krope": jnp.zeros((num_blocks, block_size, m.rope_head_dim), dtype),
+        "lat": jnp.zeros(
+            (num_blocks, block_size, m.kv_lora_rank + m.rope_head_dim),
+            dtype),
     }
 
 
-def _mla_paged_gather(cache, tables):
+def _mla_paged_gather(cache, tables, rank: int):
     """tables: (N,W) -> (ckv (N,W*bs,rank), krope (N,W*bs,rr)) in absolute
-    position order."""
+    position order — the materialising read of the parity-reference path."""
     n, w = tables.shape
-    bs = cache["ckv"].shape[1]
-    flat = tables.reshape(-1)
-    c = jnp.take(cache["ckv"], flat, axis=0).reshape(
-        n, w * bs, cache["ckv"].shape[-1])
-    r = jnp.take(cache["krope"], flat, axis=0).reshape(
-        n, w * bs, cache["krope"].shape[-1])
-    return c, r
+    bs = cache["lat"].shape[1]
+    lat = jnp.take(cache["lat"], tables.reshape(-1), axis=0).reshape(
+        n, w * bs, cache["lat"].shape[-1])
+    return lat[..., :rank], lat[..., rank:]
 
 
-def mla_paged_decode(p, cfg, x, cache, tables, pos):
-    """One decode token per lane: x (N,1,D), tables (N,W), pos (N,)."""
-    bs = cache["ckv"].shape[1]
+def _mla_paged_scatter(cache, ckv_new, krope_new, bids, slots):
+    """Write one latent row per lane: ckv_new (L,rank), krope_new (L,rr)."""
+    lat_new = jnp.concatenate([ckv_new, krope_new], axis=-1)
+    return {"lat": cache["lat"].at[bids, slots].set(lat_new)}
+
+
+def _mla_kernel_attend(p, cfg, q_nope, q_rope, cache, tables, pos, kernel):
+    """Absorbed MLA attend through the paged flash-decode kernel.
+
+    q_nope (B,T,H,n) / q_rope (B,T,H,rr) flatten to L = B*T lanes; tables
+    (L,W), pos (L,). The latent pool is the kernel's shared-page layout
+    (``v_pool=None``): V = the ckv prefix of each fetched K tile, one page
+    read; the score scale is the materialised head dim's, matching
+    ``_mla_attend``.
+    """
+    from repro.kernels import ops
+    m = cfg.mla
+    b, t, h, _ = q_nope.shape
+    q_abs = jnp.einsum("bthn,chn->bthc", q_nope, p["w_uk"])
+    qk = jnp.concatenate([q_abs, q_rope], axis=-1)         # (B,T,H,rank+rr)
+    qk = qk.reshape(b * t, 1, h, qk.shape[-1])             # KVH=1, G=H
+    pool = cache["lat"][:, :, None, :]                     # (nb,bs,1,rank+rr)
+    o_lat = ops.paged_flash_decode(
+        qk, pool, None, tables, pos,
+        scale=(m.nope_head_dim + m.rope_head_dim) ** -0.5,
+        dv=m.kv_lora_rank, backend=kernel)
+    o_lat = o_lat.reshape(b, t, h, m.kv_lora_rank)
+    out = jnp.einsum("bthc,chv->bthv", o_lat, p["w_uv"])
+    return jnp.einsum("bthv,hvd->btd", out, p["wo"])
+
+
+def mla_paged_decode(p, cfg, x, cache, tables, pos, kernel=None):
+    """One decode token per lane: x (N,1,D), tables (N,W), pos (N,).
+    ``kernel`` selects the paged flash-decode backend; None keeps the
+    gather + ``_mla_attend`` parity reference."""
+    bs = cache["lat"].shape[1]
     positions = pos[:, None]
     q_nope, q_rope = _project_q(p, cfg, x, positions)
     ckv_new, krope_new = _project_ckv(p, cfg, x, positions)
     bids = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
-    slots = pos % bs
-    cache = {
-        "ckv": cache["ckv"].at[bids, slots].set(ckv_new[:, 0]),
-        "krope": cache["krope"].at[bids, slots].set(krope_new[:, 0]),
-    }
-    c, r = _mla_paged_gather(cache, tables)
-    valid = (jnp.arange(c.shape[1])[None, None, :]
-             <= pos[:, None, None])                        # (N,1,S)
-    y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    cache = _mla_paged_scatter(cache, ckv_new[:, 0], krope_new[:, 0],
+                               bids, pos % bs)
+    if kernel is None:
+        c, r = _mla_paged_gather(cache, tables, cfg.mla.kv_lora_rank)
+        valid = (jnp.arange(c.shape[1])[None, None, :]
+                 <= pos[:, None, None])                    # (N,1,S)
+        y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    else:
+        y = _mla_kernel_attend(p, cfg, q_nope, q_rope, cache, tables, pos,
+                               kernel)
     return y, cache
 
 
-def mla_paged_prefill(p, cfg, x, cache, table, t0, n_valid):
+def mla_paged_prefill(p, cfg, x, cache, table, t0, n_valid, kernel=None):
     """One prompt chunk of a single request: x (1,C,D), the first
     ``n_valid`` tokens are real at positions t0..t0+n_valid-1; pads scatter
-    to the scratch block. Per-token math matches ``mla_paged_decode``."""
+    to the scratch block. Per-token math matches ``mla_paged_decode`` — on
+    the kernel route each chunk token becomes one kernel lane."""
     c_len = x.shape[1]
-    bs = cache["ckv"].shape[1]
+    bs = cache["lat"].shape[1]
     idx = jnp.arange(c_len)
     positions = t0 + idx[None, :]                          # (1,C)
     q_nope, q_rope = _project_q(p, cfg, x, positions)
@@ -188,12 +225,15 @@ def mla_paged_prefill(p, cfg, x, cache, table, t0, n_valid):
     lb = jnp.clip(p_abs // bs, 0, table.shape[0] - 1)
     bids = jnp.where(real, jnp.take(table, lb), 0)
     slots = jnp.where(real, p_abs % bs, 0)
-    cache = {
-        "ckv": cache["ckv"].at[bids, slots].set(ckv_new[0]),
-        "krope": cache["krope"].at[bids, slots].set(krope_new[0]),
-    }
-    c, r = _mla_paged_gather(cache, table[None, :])
-    valid = (jnp.arange(c.shape[1])[None, None, :]
-             <= positions[:, :, None])                     # (1,C,S)
-    y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    cache = _mla_paged_scatter(cache, ckv_new[0], krope_new[0], bids, slots)
+    if kernel is None:
+        c, r = _mla_paged_gather(cache, table[None, :], cfg.mla.kv_lora_rank)
+        valid = (jnp.arange(c.shape[1])[None, None, :]
+                 <= positions[:, :, None])                 # (1,C,S)
+        y = _mla_attend(p, cfg, q_nope, q_rope, c, r, valid, x.dtype)
+    else:
+        lane_tables = jnp.broadcast_to(table[None, :],
+                                       (c_len, table.shape[0]))
+        y = _mla_kernel_attend(p, cfg, q_nope, q_rope, cache, lane_tables,
+                               positions[0], kernel)
     return y, cache

@@ -104,6 +104,47 @@ def block_paged_cache_init(cfg, kind: str, num_blocks: int, block_size: int,
     raise ValueError(f"no paged decode cache for layer kind {kind!r}")
 
 
+def block_paged_decode(p, cfg, kind: str, x, cache, tables, pos,
+                       kernel=None):
+    """Attention half of one paged decode step (ln1 + attend + residual).
+
+    x: (N,1,D); tables: (N,W); pos: (N,). ``kernel`` selects the paged
+    flash-decode backend (kernels/paged_attention.py) for every paged kind;
+    None keeps each family's gather + dense-attend parity reference.
+    Returns (x, new_cache).
+    """
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mla":
+        o, nc = mla.mla_paged_decode(p["attn"], cfg, h, cache, tables, pos,
+                                     kernel=kernel)
+    elif kind == "global":
+        o, nc = attn.paged_attn_decode(p["attn"], cfg, h, cache, tables,
+                                       pos, kernel=kernel)
+    else:
+        raise ValueError(f"layer kind {kind!r} does not page")
+    return x + o, nc
+
+
+def block_paged_prefill(p, cfg, kind: str, x, cache, table, t0, n_valid,
+                        kernel=None):
+    """Attention half of one paged prefill chunk for a single request.
+
+    x: (1,C,D); table: (W,); t0/n_valid scalars. Same kernel selection as
+    ``block_paged_decode`` — chunk tokens become kernel lanes, keeping the
+    chunked-prefill stream token-identical to decode. Returns (x, new_cache).
+    """
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "mla":
+        o, nc = mla.mla_paged_prefill(p["attn"], cfg, h, cache, table, t0,
+                                      n_valid, kernel=kernel)
+    elif kind == "global":
+        o, nc = attn.paged_attn_prefill(p["attn"], cfg, h, cache, table, t0,
+                                        n_valid, kernel=kernel)
+    else:
+        raise ValueError(f"layer kind {kind!r} does not page")
+    return x + o, nc
+
+
 def block_apply(p, cfg, kind: str, x, positions, mode: str,
                 cache=None, pos=None, cache_len: int = 0):
     """Returns (x, new_cache, extras)."""

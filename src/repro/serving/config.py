@@ -1,0 +1,45 @@
+"""Serving-engine configuration shared by the scheduler and DecodeCore.
+
+One place for the knobs that shape the paged serving engine: batching, the
+block-paged KV layout, chunked prefill, and — since the paged flash-decode
+kernel — which *read path* every paged attention layer compiles to.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for ``BatchedOffloadEngine`` / ``DecodeCore``.
+
+    use_kernel / kernel_backend drive the paged attention read path:
+      * ``use_kernel=False`` — the PR-2 gather route (materialise each
+        lane's pages, dense attend): the parity reference / escape hatch.
+      * ``use_kernel=True`` (default) — the paged flash-decode kernel.
+        ``kernel_backend`` picks its implementation: "tpu" (compiled
+        Pallas), "pallas" (interpret-mode Pallas — CI validation), "jnp"
+        (the lax.scan flash twin), or None to auto-select "tpu" on TPU and
+        "jnp" elsewhere.
+    """
+    max_batch: int = 4
+    paged: bool = True
+    block_size: int = 8
+    kv_blocks: Optional[int] = None
+    prefill_chunk: int = 8
+    use_kernel: bool = True
+    kernel_backend: Optional[str] = None
+
+    def resolve_kernel(self) -> Optional[str]:
+        """The backend string the engine threads into jitted attention
+        programs — None means the gather reference path."""
+        if self.kernel_backend not in (None, "jnp", "pallas", "tpu"):
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r}")
+        if not self.use_kernel:
+            return None
+        if self.kernel_backend is None:
+            from repro.kernels.runtime import default_kernel_backend
+            return default_kernel_backend()
+        return self.kernel_backend

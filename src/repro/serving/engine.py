@@ -20,10 +20,14 @@ assert this.
 
 The core speaks two KV layouts: contiguous per-request rows (the batch-1
 fallback and ring-buffer kinds), and the **block-paged** layout of
-serving/kvpool.py — ``step(..., tables=)`` gathers/scatters K/V through
-per-request block tables, and ``prefill_chunk`` absorbs a prompt chunk of
-one request through the same paged pools (power-of-two chunk buckets,
-per-token math identical to decode, so streams stay token-identical).
+serving/kvpool.py — ``step(..., tables=)`` scatters K/V through per-request
+block tables, and ``prefill_chunk`` absorbs a prompt chunk of one request
+through the same paged pools (power-of-two chunk buckets, per-token math
+identical to decode, so streams stay token-identical). The paged *read*
+path compiles to the paged flash-decode kernel
+(kernels/paged_attention.py) selected by ``use_kernel``/``kernel_backend``;
+``use_kernel=False`` keeps the PR-2 gather-and-materialise route as the
+parity reference.
 """
 from __future__ import annotations
 
@@ -91,6 +95,12 @@ class EngineStats:
     steps: int = 0                  # batched decode steps executed
     prefill_tokens: int = 0         # prompt tokens absorbed by chunked prefill
     prefill_chunks: int = 0         # chunked-prefill steps executed
+    # prompt tokens that had to stream token-by-token through decode because
+    # the stack can't chunk-prefill (ring/recurrent kinds) or paging is off —
+    # the measurable size of the ROADMAP "chunked prefill for ring/recurrent
+    # kinds" gap. Excludes each prompt's final token (decode must run it to
+    # produce the first sampled logits on every path).
+    fallback_prefill_tokens: int = 0
 
     @property
     def hit_rate(self):
@@ -115,7 +125,8 @@ class DecodeCore:
     def __init__(self, model, params, capacity: int, eviction: str = "lru",
                  host_bw: float = 100e9, expert_backend: str = "jnp",
                  max_batch: int = 1, layer_compute_s: float = 0.0,
-                 max_prefill_chunk: int = 8):
+                 max_prefill_chunk: int = 8,
+                 kernel: Optional[str] = "auto"):
         cfg = model.cfg
         assert cfg.moe is not None, "offload engine needs an MoE backbone"
         self.cfg = cfg
@@ -130,6 +141,12 @@ class DecodeCore:
         self.scratch_row = max_batch
         self.layer_compute_s = layer_compute_s
         self.max_prefill_chunk = max_prefill_chunk
+        # paged attention read path: a kernel backend string threaded into
+        # the jitted paged programs, None for the gather parity route, or
+        # "auto" for the backend-appropriate default (ServeConfig holds the
+        # same rule at the scheduler level and passes the resolved value)
+        from repro.kernels.runtime import default_kernel_backend
+        self.kernel = default_kernel_backend() if kernel == "auto" else kernel
 
         # host store gets the routed-expert weights; everything else stays
         # in self.layers (device)
@@ -180,29 +197,18 @@ class DecodeCore:
             new = jax.tree.map(lambda c, n: c.at[rows].set(n), caches, nsub)
             return y[:, None, :], new
 
-        @partial(jax.jit, static_argnames=("kind",))
-        def paged_attn_step(lp, x, cache, tables, pos, kind):
+        @partial(jax.jit, static_argnames=("kind", "kernel"))
+        def paged_attn_step(lp, x, cache, tables, pos, kind, kernel):
             # x: (N,1,D); cache: block pool; tables: (N,W); pos: (N,)
-            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-            if kind == "mla":
-                o, nc = mla_mod.mla_paged_decode(lp["attn"], cfg, h, cache,
-                                                 tables, pos)
-            else:
-                o, nc = attn_mod.paged_attn_decode(lp["attn"], cfg, h, cache,
-                                                   tables, pos)
-            return x + o, nc
+            return T.block_paged_decode(lp, cfg, kind, x, cache, tables,
+                                        pos, kernel=kernel)
 
-        @partial(jax.jit, static_argnames=("kind",))
-        def paged_prefill_step(lp, x, cache, table, t0, n_valid, kind):
+        @partial(jax.jit, static_argnames=("kind", "kernel"))
+        def paged_prefill_step(lp, x, cache, table, t0, n_valid, kind,
+                               kernel):
             # x: (1,C,D) chunk of ONE request; table: (W,); t0/n_valid scalar
-            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-            if kind == "mla":
-                o, nc = mla_mod.mla_paged_prefill(lp["attn"], cfg, h, cache,
-                                                  table, t0, n_valid)
-            else:
-                o, nc = attn_mod.paged_attn_prefill(lp["attn"], cfg, h, cache,
-                                                    table, t0, n_valid)
-            return x + o, nc
+            return T.block_paged_prefill(lp, cfg, kind, x, cache, table, t0,
+                                         n_valid, kernel=kernel)
 
         @jax.jit
         def dense_ffn_half(lp, x):
@@ -386,7 +392,8 @@ class DecodeCore:
             kind = self.kinds[li]
             if tables is not None and kind in T.PAGED_KINDS:
                 x, caches[li] = self._paged_attn(lp, x, caches[li], tab_p,
-                                                 pos_p, kind=kind)
+                                                 pos_p, kind=kind,
+                                                 kernel=self.kernel)
             else:
                 x, caches[li] = self._attn(lp, x, caches[li], rows_p, pos_p,
                                            kind=kind)
@@ -442,7 +449,8 @@ class DecodeCore:
         for li in range(cfg.num_layers):
             lp = self.layers[li]
             x, caches[li] = self._paged_prefill(lp, x, caches[li], tab, t0,
-                                                n, kind=self.kinds[li])
+                                                n, kind=self.kinds[li],
+                                                kernel=self.kernel)
             self.tracker.advance(self.layer_compute_s)
             if li in self.moe_index:
                 mi = self.moe_index[li]

@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.policies import PerRequestPolicy, Policy
+from repro.serving.config import ServeConfig
 from repro.serving.engine import DecodeCore, EngineStats, sample_token
 from repro.serving.kvpool import BlockTable, KVBlockPool, blocks_for
 
@@ -98,6 +99,11 @@ class BatchedOffloadEngine:
     ``max_batch`` full-length requests, plus the scratch block); a smaller
     pool admits by block availability instead. paged=False keeps the
     contiguous fixed-row engine.
+
+    ``serve`` (a :class:`ServeConfig`) bundles the batching/paging/kernel
+    knobs in one place and overrides the individual keyword arguments;
+    ``use_kernel``/``kernel_backend`` select the paged flash-decode read
+    path (``use_kernel=False`` is the gather parity reference).
     """
 
     def __init__(self, model, params, policy: PolicySpec, capacity: int,
@@ -105,7 +111,17 @@ class BatchedOffloadEngine:
                  expert_backend: str = "jnp", max_batch: int = 4,
                  layer_compute_s: float = 0.0, paged: bool = True,
                  block_size: int = 8, kv_blocks: Optional[int] = None,
-                 prefill_chunk: int = 8):
+                 prefill_chunk: int = 8, use_kernel: bool = True,
+                 kernel_backend: Optional[str] = None,
+                 serve: Optional[ServeConfig] = None):
+        if serve is None:
+            serve = ServeConfig(max_batch=max_batch, paged=paged,
+                                block_size=block_size, kv_blocks=kv_blocks,
+                                prefill_chunk=prefill_chunk,
+                                use_kernel=use_kernel,
+                                kernel_backend=kernel_backend)
+        self.serve = serve
+        max_batch = serve.max_batch
         need = max_batch * model.cfg.moe.top_k
         if capacity < need:
             raise ValueError(
@@ -113,17 +129,18 @@ class BatchedOffloadEngine:
                 "step could pin more experts than the cache holds")
         # a prefill chunk pins up to chunk*top_k experts — clamp it to the
         # same bound the decode batch obeys
-        self.prefill_chunk = max(1, min(prefill_chunk,
+        self.prefill_chunk = max(1, min(serve.prefill_chunk,
                                         capacity // model.cfg.moe.top_k))
         self.core = DecodeCore(model, params, capacity, eviction, host_bw,
                                expert_backend, max_batch=max_batch,
                                layer_compute_s=layer_compute_s,
-                               max_prefill_chunk=self.prefill_chunk)
+                               max_prefill_chunk=self.prefill_chunk,
+                               kernel=serve.resolve_kernel())
         self.cfg = self.core.cfg
         self.max_batch = max_batch
-        self.paged = paged and self.core.paged_ok
-        self.block_size = block_size
-        self.kv_blocks = kv_blocks
+        self.paged = serve.paged and self.core.paged_ok
+        self.block_size = serve.block_size
+        self.kv_blocks = serve.kv_blocks
         self.pool: Optional[KVBlockPool] = None
         self.kv_block_bytes = 0          # device bytes per block, set by run
         self._policy = None if policy is None else PerRequestPolicy(policy)
@@ -189,6 +206,7 @@ class BatchedOffloadEngine:
                     if self._policy is not None:
                         self._policy.begin_request(req.rid)
             active = [(s, r) for s, r in enumerate(rows) if r is not None]
+            self._count_fallback(r for _, r in active)
             logits, caches, _ = self.core.step(
                 caches,
                 rows=[s for s, _ in active],
@@ -240,6 +258,14 @@ class BatchedOffloadEngine:
                 # degenerate: cache_len admits zero steps
                 self._retire(lanes, req, results)
 
+    def _count_fallback(self, active) -> None:
+        """Prompt tokens fed through a decode step that chunked prefill
+        could have absorbed (position < len(prompt)-1): zero on the
+        chunk-prefill path, the whole prompt body when ring/recurrent
+        stacks (or paged=False) stream prompts token-by-token."""
+        self.core.stats.fallback_prefill_tokens += sum(
+            1 for r in active if r.t < len(r.prompt) - 1)
+
     def _retire(self, lanes, req: Request, results) -> None:
         results[req.rid] = req.generated
         self._record_ttft(req)
@@ -283,6 +309,7 @@ class BatchedOffloadEngine:
                       if r is not None and not r.prefilling]
             if not active:
                 continue
+            self._count_fallback(active)
             for r in active:
                 r.table.ensure(r.t)
             tables = np.stack([r.table.padded(table_width) for r in active])

@@ -76,6 +76,163 @@ def test_flash_decode_matches_model_attention():
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Paged flash-decode: block-table attention against the pool layout
+
+
+def _paged_case(bs, kvh, g, hd, w, n, seed, dtype=jnp.float32, pad_w=0):
+    """Random pool + per-lane tables/positions. Lane tables draw distinct
+    blocks (plus ``pad_w`` scratch-padded tail entries); positions are
+    ragged and include a partially-filled last block."""
+    rng = np.random.default_rng(seed)
+    nb = n * w + 3                       # spare blocks stay unreferenced
+    q = jnp.asarray(rng.normal(size=(n, kvh, g, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)), dtype)
+    perm = rng.permutation(nb - 1)[: n * w] + 1          # never scratch
+    tables = np.zeros((n, w + pad_w), np.int32)
+    tables[:, :w] = perm.reshape(n, w)
+    # ragged: lane 0 ends mid-block, last lane uses the full table
+    pos = rng.integers(0, w * bs, size=n)
+    pos[0] = (w - 1) * bs + bs // 2 - 1 if w * bs > 1 else 0
+    pos[-1] = w * bs - 1
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(pos, jnp.int32)
+
+
+@pytest.mark.parametrize("bs", [8, 16, 64])
+@pytest.mark.parametrize("kvh,g", [(1, 4), (2, 2), (4, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_decode(bs, kvh, g, dtype):
+    """Kernel body (interpret) and its lax.scan twin vs the dense oracle,
+    across block sizes, GQA group sizes, ragged pos, and a scratch-padded
+    table tail."""
+    q, kp, vp, tables, pos = _paged_case(bs, kvh, g, hd=32, w=3, n=3,
+                                         seed=bs * 10 + kvh, dtype=dtype,
+                                         pad_w=2)
+    yr = np.asarray(ref.paged_flash_decode_ref(q, kp, vp, tables, pos),
+                    np.float32)
+    tol = 5e-4 if dtype == jnp.float32 else 3e-2
+    for backend in ("pallas", "jnp"):
+        yp = np.asarray(ops.paged_flash_decode(q, kp, vp, tables, pos,
+                                               backend=backend), np.float32)
+        np.testing.assert_allclose(yr, yp, rtol=tol, atol=tol,
+                                   err_msg=backend)
+
+
+def test_paged_flash_decode_mla_layout():
+    """The MLA latent layout (``v_pool=None``): one kv head, K = the whole
+    latent page, V = its first ``dv`` features sliced from the same fetch,
+    custom scale — and it must equal passing the pool explicitly twice."""
+    q, kp, _, tables, pos = _paged_case(bs=8, kvh=1, g=4, hd=48, w=4, n=2,
+                                        seed=7)
+    scale, dv = 0.125, 32
+    yr = np.asarray(ref.paged_flash_decode_ref(q, kp, None, tables, pos,
+                                               scale=scale, dv=dv),
+                    np.float32)
+    assert yr.shape == (2, 1, 4, dv)
+    y2 = np.asarray(ref.paged_flash_decode_ref(q, kp, kp, tables, pos,
+                                               scale=scale, dv=dv),
+                    np.float32)
+    np.testing.assert_array_equal(yr, y2)    # shared == explicit two-pool
+    for backend in ("pallas", "jnp"):
+        yp = np.asarray(ops.paged_flash_decode(q, kp, None, tables, pos,
+                                               scale=scale, dv=dv,
+                                               backend=backend), np.float32)
+        np.testing.assert_allclose(yr, yp, rtol=5e-4, atol=5e-4,
+                                   err_msg=backend)
+
+
+def test_paged_flash_decode_jnp_tiling_invariant():
+    """The scan twin's tile size is a perf knob, not a semantics knob."""
+    from repro.kernels.paged_attention import paged_flash_decode_jnp
+    q, kp, vp, tables, pos = _paged_case(bs=8, kvh=2, g=2, hd=32, w=5, n=2,
+                                         seed=3)
+    base = np.asarray(paged_flash_decode_jnp(q, kp, vp, tables, pos,
+                                             tile_blocks=1), np.float32)
+    for tile in (2, 3, 5, 128):
+        got = np.asarray(paged_flash_decode_jnp(q, kp, vp, tables, pos,
+                                                tile_blocks=tile),
+                         np.float32)
+        np.testing.assert_allclose(base, got, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"tile={tile}")
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_paged_flash_decode_scratch_invariance(backend):
+    """Output is invariant to the contents of the scratch block and of pool
+    blocks no table references below ``pos`` — masked positions contribute
+    exactly zero (the hypothesis sweep in test_properties.py randomises
+    this; here one deterministic case pins both backends)."""
+    rng = np.random.default_rng(0)
+    bs, kvh, g, hd, nb = 8, 2, 2, 16, 8
+    q = jnp.asarray(rng.normal(size=(2, kvh, g, hd)), jnp.float32)
+    kp = np.asarray(rng.normal(size=(nb, bs, kvh, hd)), np.float32)
+    vp = np.asarray(rng.normal(size=(nb, bs, kvh, hd)), np.float32)
+    tables = jnp.asarray([[3, 5], [6, 0]], jnp.int32)   # lane 1: scratch tail
+    pos = jnp.asarray([15, 4], jnp.int32)
+    kp2, vp2 = kp.copy(), vp.copy()
+    for b in (0, 1, 2, 4, 7):                 # scratch + unreferenced
+        kp2[b] = 99.0
+        vp2[b] = -99.0
+    out1 = np.asarray(ops.paged_flash_decode(
+        q, jnp.asarray(kp), jnp.asarray(vp), tables, pos, backend=backend))
+    out2 = np.asarray(ops.paged_flash_decode(
+        q, jnp.asarray(kp2), jnp.asarray(vp2), tables, pos,
+        backend=backend))
+    np.testing.assert_array_equal(out1, out2)
+
+
+@pytest.mark.parametrize("kernel", ["pallas", "jnp"])
+def test_paged_attn_decode_kernel_vs_gather(kernel):
+    """Model-level GQA pin: ``paged_attn_decode`` through the kernel route
+    equals the gather + dense-attend reference route (yi-6b reduced:
+    4 heads over 2 kv heads)."""
+    from repro.configs import get_reduced
+    from repro.models import attention as attn
+    cfg = get_reduced("yi-6b")
+    key = jax.random.PRNGKey(0)
+    p = attn.attn_init(key, cfg, jnp.float32)
+    bs, w, n = 8, 3, 3
+    cache = attn.paged_init_cache(cfg, n * w + 1, bs, jnp.float32)
+    cache = {k: jax.random.normal(jax.random.PRNGKey(1), v.shape, v.dtype)
+             for k, v in cache.items()}
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, 1, cfg.d_model))
+    tables = jnp.asarray(1 + np.arange(n * w).reshape(n, w), jnp.int32)
+    pos = jnp.asarray([5, 17, 23], jnp.int32)
+    y_ref, c_ref = attn.paged_attn_decode(p, cfg, x, cache, tables, pos)
+    y_ker, c_ker = attn.paged_attn_decode(p, cfg, x, cache, tables, pos,
+                                          kernel=kernel)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ker),
+                               rtol=2e-5, atol=2e-5)
+    for k in c_ref:                      # scatter identical on both routes
+        np.testing.assert_array_equal(np.asarray(c_ref[k]),
+                                      np.asarray(c_ker[k]))
+
+
+@pytest.mark.parametrize("kernel", ["pallas", "jnp"])
+def test_mla_paged_kernel_vs_attend(kernel):
+    """MLA pin: absorbed paged decode through the kernel equals the
+    ``_mla_attend`` gather reference (deepseek-v2-lite reduced latents)."""
+    from repro.configs import get_reduced
+    from repro.models import mla
+    cfg = get_reduced("deepseek-v2-lite")
+    p = mla.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    bs, w, n = 8, 3, 2
+    cache = mla.mla_paged_init_cache(cfg, n * w + 1, bs, jnp.float32)
+    cache = {k: jax.random.normal(jax.random.PRNGKey(1), v.shape, v.dtype)
+             for k, v in cache.items()}
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, 1, cfg.d_model))
+    tables = jnp.asarray(1 + np.arange(n * w).reshape(n, w), jnp.int32)
+    pos = jnp.asarray([11, 23], jnp.int32)
+    y_ref, c_ref = mla.mla_paged_decode(p, cfg, x, cache, tables, pos)
+    y_ker, c_ker = mla.mla_paged_decode(p, cfg, x, cache, tables, pos,
+                                        kernel=kernel)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ker),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(c_ref["lat"]),
+                                  np.asarray(c_ker["lat"]))
+
+
 @pytest.mark.parametrize("g,h,l,n,p", [
     (4, 3, 32, 16, 64), (2, 8, 128, 128, 64), (6, 1, 64, 32, 32),
     (1, 24, 128, 32, 64),

@@ -47,6 +47,7 @@ def test_paged_chunked_matches_batch1_ragged(backbone, ref_streams):
     # prompts were absorbed by prefill chunks, not token-by-token decode
     assert eng.stats.prefill_chunks > 0
     assert eng.stats.prefill_tokens == sum(len(p) - 1 for p in PROMPTS)
+    assert eng.stats.fallback_prefill_tokens == 0    # nothing streamed
     # pool hygiene: every block came back, high-water < worst-case rows
     eng.pool.check_leaks()
     assert eng.pool.blocks_in_use == 0
@@ -133,6 +134,56 @@ def test_prefill_logits_match_decode_per_position(backbone):
     table.release()
 
 
+def test_kernel_vs_gather_token_identical(backbone, ref_streams):
+    """Tentpole acceptance: the flash-decode kernel route (default) and the
+    PR-2 gather route (use_kernel=False) produce identical token streams —
+    and both equal the contiguous batch-1 reference."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    gather = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                                  block_size=4, use_kernel=False)
+    assert gather.core.kernel is None
+    outs_gather = gather.generate(PROMPTS, max_new=MAX_NEW,
+                                  cache_len=CACHE_LEN)
+    kernel = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                                  block_size=4)
+    assert kernel.core.kernel is not None    # flash-decode is the default
+    outs_kernel = kernel.generate(PROMPTS, max_new=MAX_NEW,
+                                  cache_len=CACHE_LEN)
+    assert outs_kernel == outs_gather == ref_streams
+
+
+def test_pallas_backend_through_engine(backbone, ref_streams):
+    """The interpret-mode Pallas body serves the whole engine (decode steps
+    AND prefill chunks) with streams identical to the reference — the CI
+    pin that the kernel the TPU compiles is the one the engine runs."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                               block_size=4, kernel_backend="pallas")
+    assert eng.core.kernel == "pallas"
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref_streams
+    assert eng.stats.prefill_chunks > 0
+
+
+def test_serve_config_bundles_knobs(backbone, ref_streams):
+    """ServeConfig overrides the individual kwargs and reaches the core."""
+    from repro.serving.config import ServeConfig
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    sc = ServeConfig(max_batch=2, block_size=4, prefill_chunk=4,
+                     use_kernel=True, kernel_backend="jnp")
+    eng = BatchedOffloadEngine(model, params, None, n_total,
+                               max_batch=999, block_size=999, serve=sc)
+    assert eng.max_batch == 2 and eng.block_size == 4
+    assert eng.core.kernel == "jnp"
+    assert sc.resolve_kernel() == "jnp"
+    assert ServeConfig(use_kernel=False).resolve_kernel() is None
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref_streams
+
+
 def test_contiguous_fallback_still_available(backbone, ref_streams):
     """paged=False keeps the PR-1 fixed-row engine as the fallback."""
     cfg, model, params, _ = backbone
@@ -142,6 +193,9 @@ def test_contiguous_fallback_still_available(backbone, ref_streams):
     outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
     assert outs == ref_streams
     assert eng.stats.prefill_chunks == 0         # prompts streamed as decode
+    # every prompt body token counted as a token-by-token fallback
+    assert eng.stats.fallback_prefill_tokens == \
+        sum(len(p) - 1 for p in PROMPTS)
     assert eng.pool is None
 
 
@@ -168,6 +222,11 @@ def test_mixed_attention_kinds_page_and_ring():
     outs = eng.generate(prompts, max_new=5, cache_len=16)
     assert outs == refs
     assert eng.stats.prefill_chunks == 0         # token-by-token fallback
+    # the ROADMAP gap is measurable: ring/recurrent prompts count their
+    # bodies as fallback tokens (the final prompt token is decode on every
+    # path, so it is excluded)
+    assert eng.stats.fallback_prefill_tokens == \
+        sum(len(p) - 1 for p in prompts)
 
 
 def test_ttft_recorded(backbone):

@@ -114,6 +114,51 @@ def test_kmeans_properties(n, d, k, seed):
     np.testing.assert_allclose(norms[norms > 1e-9], 1.0, atol=1e-6)
 
 
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_paged_kernel_ignores_unreferenced_blocks(data):
+    """Live lanes' paged flash-decode output is invariant to the contents
+    of the scratch block and every pool block their tables don't reference
+    below ``pos`` — garbage there must contribute exactly zero, even with a
+    scratch-table padding lane sharing the launch."""
+    from repro.kernels import ops
+    from repro.serving.kvpool import blocks_for
+
+    bs = data.draw(st.sampled_from([4, 8]), label="block_size")
+    w = data.draw(st.integers(1, 4), label="table_width")
+    kvh = data.draw(st.sampled_from([1, 2]), label="kv_heads")
+    g = data.draw(st.sampled_from([1, 2]), label="group")
+    hd = 8
+    n_live = data.draw(st.integers(1, 3), label="live_lanes")
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    rng = np.random.default_rng(seed)
+
+    nb = n_live * w + 3                       # leaves blocks unreferenced
+    n = n_live + 1                            # plus one all-scratch pad lane
+    pos = np.array([rng.integers(0, w * bs) for _ in range(n_live)] + [0])
+    tables = np.zeros((n, w), np.int32)
+    perm = rng.permutation(nb - 1)[: n_live * w] + 1
+    for i in range(n_live):
+        used = blocks_for(int(pos[i]) + 1, bs)
+        tables[i, :used] = perm[i * w: i * w + used]   # scratch-padded tail
+    q = jnp.asarray(rng.normal(size=(n, kvh, g, hd)), jnp.float32)
+    kp = np.asarray(rng.normal(size=(nb, bs, kvh, hd)), np.float32)
+    vp = np.asarray(rng.normal(size=(nb, bs, kvh, hd)), np.float32)
+
+    referenced = {int(b) for row in tables for b in row if b != 0}
+    kp2, vp2 = kp.copy(), vp.copy()
+    for b in set(range(nb)) - referenced:     # scratch + unreferenced
+        kp2[b] = rng.normal(size=kp[b].shape) * 100
+        vp2[b] = rng.normal(size=vp[b].shape) * 100
+
+    args = (jnp.asarray(tables), jnp.asarray(pos, jnp.int32))
+    out1 = np.asarray(ops.paged_flash_decode(
+        q, jnp.asarray(kp), jnp.asarray(vp), *args, backend="jnp"))
+    out2 = np.asarray(ops.paged_flash_decode(
+        q, jnp.asarray(kp2), jnp.asarray(vp2), *args, backend="jnp"))
+    np.testing.assert_array_equal(out1[:n_live], out2[:n_live])
+
+
 @given(seed=st.integers(0, 500), cap_frac=st.floats(0.1, 1.0))
 @settings(max_examples=20, deadline=None)
 def test_oracle_dominates_random(seed, cap_frac):
