@@ -21,6 +21,14 @@ modeled KV bytes read, and the (N, W*block_size, ...) bytes only the gather
 route materialises:
   PYTHONPATH=src python -m benchmarks.engine_bench --tiny --longctx \
       --out artifacts/engine_bench_longctx.json
+
+Prefix-sharing mode (--prefix): N requests sharing a >=64-token system
+prompt through the paged engine with the prefix cache on vs off — reports
+the prefix hit rate, skipped-prefill tokens, per-request TTFT, and the KV
+block high-water (streams must stay token-identical; TTFT and high-water
+must drop):
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --prefix \
+      --out artifacts/engine_bench_prefix.json
 """
 from __future__ import annotations
 
@@ -162,6 +170,88 @@ def _mixed_latency(model, params, cfg, prompts, max_new: int, cache_len: int,
         "fallback_prefill_tokens_paged": pag.stats.fallback_prefill_tokens,
         "streams_identical": True,
     }
+
+
+def _prefix_workload(cfg, corpus, n_requests: int, sys_len: int,
+                     tail_len: int, seed: int):
+    """N prompts sharing one ``sys_len``-token system prompt with unique
+    ``tail_len``-token user tails — the shape prefix sharing targets."""
+    from repro.data import sample_prompts
+    system = sample_prompts(corpus, 1, sys_len, seed=seed)[0]
+    tails = [sample_prompts(corpus, 1, tail_len, seed=seed + 1 + i)[0]
+             for i in range(n_requests)]
+    return [list(system) + list(t) for t in tails]
+
+
+def _prefix_sharing(model, params, cfg, prompts, shared_len: int,
+                    max_new: int, cache_len: int, batch: int,
+                    block_size: int, log=print):
+    """Prefix cache on vs off on a shared-system-prompt workload: streams
+    must stay token-identical while TTFT and the KV block high-water drop
+    and the hit counters show real skipped prefill."""
+    from repro.core.tracing import moe_layer_ids
+    from repro.serving.scheduler import BatchedOffloadEngine
+
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+
+    def ttft_mean(eng, rid_from):
+        tt = [v for r, v in eng.ttft().items() if r >= rid_from]
+        return float(sum(tt) / len(tt)) if tt else 0.0
+
+    engines = {}
+    for name, share in (("off", False), ("on", True)):
+        eng = BatchedOffloadEngine(model, params, None, n_total,
+                                   max_batch=batch, block_size=block_size,
+                                   prefill_chunk=16, prefix_cache=share)
+        # warm jit outside the timed region (the warm run's prefix index is
+        # per-run state and is rebuilt from scratch by the timed run)
+        eng.generate(prompts[:2], max_new=2, cache_len=cache_len)
+        engines[name] = eng
+
+    out = {}
+    streams = {}
+    for name, eng in engines.items():
+        rid0 = eng._next_rid
+        ptok0 = eng.stats.prefill_tokens
+        t0 = time.perf_counter()
+        streams[name] = eng.generate(prompts, max_new=max_new,
+                                     cache_len=cache_len)
+        out[f"wall_{name}_s"] = time.perf_counter() - t0
+        out[f"ttft_{name}_mean_s"] = ttft_mean(eng, rid0)
+        out[f"kv_blocks_high_water_{name}"] = eng.pool.stats.high_water
+        out[f"prefill_tokens_{name}"] = eng.stats.prefill_tokens - ptok0
+
+    assert streams["on"] == streams["off"], \
+        "prefix sharing changed a token stream"
+    eng = engines["on"]
+    st = eng.prefix.stats
+    eng.pool.check_leaks(expected_in_use=eng.prefix.cached_blocks)
+    out.update({
+        "streams_identical": True,
+        "n_requests": len(prompts),
+        "shared_prefix_tokens": shared_len,
+        "prefix_hit_rate": st.hit_rate,
+        "prefix_hits": st.hits,
+        "prefix_extensions": st.extensions,
+        "skipped_prefill_tokens": st.hit_tokens,
+        "prefix_cached_blocks": eng.prefix.cached_blocks,
+        "cow_copies": eng.pool.stats.cow_copies,
+        "ttft_speedup": (out["ttft_off_mean_s"]
+                         / max(out["ttft_on_mean_s"], 1e-9)),
+        "kv_high_water_frac": (out["kv_blocks_high_water_on"]
+                               / max(out["kv_blocks_high_water_off"], 1)),
+    })
+    log(f"  prefix sharing batch={batch}: hit rate "
+        f"{st.hit_rate:.2f} ({st.hits} hits + {st.extensions} boundary "
+        f"extensions), {st.hit_tokens} prompt tokens skipped, "
+        f"{out['cow_copies']} COW copies")
+    log(f"  TTFT mean {out['ttft_off_mean_s'] * 1e3:.1f}ms off -> "
+        f"{out['ttft_on_mean_s'] * 1e3:.1f}ms on "
+        f"({out['ttft_speedup']:.2f}x); KV high-water "
+        f"{out['kv_blocks_high_water_off']} -> "
+        f"{out['kv_blocks_high_water_on']} blocks "
+        f"({out['kv_high_water_frac']:.2f}x)")
+    return out
 
 
 def _longctx_sweep(model, params, cfg, lengths, batch: int, block_size: int,
@@ -341,12 +431,14 @@ def run(log=print):
     return out
 
 
-def run_tiny(out_path=None, mixed=False, longctx=False, log=print):
+def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
+             log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
     ragged-length admission-latency / memory-high-water workload;
     ``longctx`` to the cache-length sweep (kernel vs gather read path —
-    untrained weights, attention timing only)."""
+    untrained weights, attention timing only); ``prefix`` to the
+    shared-system-prompt workload (prefix cache on vs off)."""
     from repro.configs import get_reduced
     from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
     from repro.core.tracing import moe_layer_ids
@@ -368,12 +460,22 @@ def run_tiny(out_path=None, mixed=False, longctx=False, log=print):
     n_moe = len(moe_layer_ids(cfg))
     e = cfg.moe.num_experts
 
-    if mixed:
-        prompts = _mixed_workload(cfg, corpus, n_requests=8, seed=11)
-        results = _mixed_latency(model, params, cfg, prompts, max_new=8,
-                                 cache_len=48, batch=4, log=log)
+    if mixed or prefix:
+        if prefix:
+            sys_len = 64
+            prompts = _prefix_workload(cfg, corpus, n_requests=8,
+                                       sys_len=sys_len, tail_len=8, seed=13)
+            results = _prefix_sharing(model, params, cfg, prompts,
+                                      shared_len=sys_len, max_new=8,
+                                      cache_len=96, batch=4, block_size=8,
+                                      log=log)
+        else:
+            prompts = _mixed_workload(cfg, corpus, n_requests=8, seed=11)
+            results = _mixed_latency(model, params, cfg, prompts, max_new=8,
+                                     cache_len=48, batch=4, log=log)
         results["wall_s"] = time.time() - t0
-        log(f"  tiny mixed bench: {json.dumps(results, indent=2)}")
+        mode = "prefix" if prefix else "mixed"
+        log(f"  tiny {mode} bench: {json.dumps(results, indent=2)}")
         if out_path:
             os.makedirs(os.path.dirname(os.path.abspath(out_path)),
                         exist_ok=True)
@@ -427,13 +529,18 @@ def main():
     mode.add_argument("--longctx", action="store_true",
                       help="cache-length sweep: per-step decode latency + "
                            "bytes read, paged flash-decode kernel vs gather")
+    mode.add_argument("--prefix", action="store_true",
+                      help="shared-system-prompt workload: prefix cache on "
+                           "vs off — hit rate, skipped prefill, TTFT, KV "
+                           "high-water")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
     if args.longctx and not args.tiny:
         _run_longctx(lengths=(1024, 4096, 8192, 16384, 32768), iters=3,
                      out_path=args.out)
-    elif args.tiny or args.mixed:
-        run_tiny(args.out, mixed=args.mixed, longctx=args.longctx)
+    elif args.tiny or args.mixed or args.prefix:
+        run_tiny(args.out, mixed=args.mixed, longctx=args.longctx,
+                 prefix=args.prefix)
     else:
         results = run()
         if args.out:

@@ -369,6 +369,17 @@ class PerRequestPolicy:
     def end_request(self, rid: int) -> None:
         self._per_req.pop(rid, None)
 
+    def replay_prefix(self, rid: int, experts_by_layer) -> None:
+        """Feed a prefix-cache hit's recorded activations into the request's
+        policy as observations — the request skips the prefill that would
+        have produced them, so replay is how rEAM-style predictors still see
+        the prompt's routing signature. ``experts_by_layer`` maps MoE-layer
+        ordinal -> expert-id array (no embeddings exist for skipped tokens,
+        so embedding-driven policies simply ignore the replay)."""
+        pol = self._get(rid)
+        for mi in sorted(experts_by_layer):
+            pol.observe(0, mi, np.asarray(experts_by_layer[mi]), None)
+
     def predict_batch(self, rids: Sequence[int], ts: Sequence[int],
                       layer: int) -> List[np.ndarray]:
         if self._shared is not None:   # shared policy: use its batched path

@@ -217,6 +217,16 @@ def _paged_scatter(cache, k_new, v_new, bids, slots):
     }
 
 
+def paged_copy_block(cache, src, dst):
+    """Copy one pool page ``src -> dst`` (both K and V planes) — the device
+    half of copy-on-write: a request about to write into a block it shares
+    with siblings first duplicates the page into its private block."""
+    return {
+        "k": cache["k"].at[dst].set(cache["k"][src]),
+        "v": cache["v"].at[dst].set(cache["v"][src]),
+    }
+
+
 def _paged_gather(cache, tables):
     """tables: (N, W) int32 -> K/V (N, W*block_size, KVH, hd) in absolute
     position order (logical block i of the table covers positions

@@ -146,6 +146,12 @@ def mla_paged_init_cache(cfg, num_blocks: int, block_size: int, dtype):
     }
 
 
+def mla_paged_copy_block(cache, src, dst):
+    """Copy one latent pool page ``src -> dst`` — the MLA device half of
+    copy-on-write (the single ``lat`` tensor is the whole page)."""
+    return {"lat": cache["lat"].at[dst].set(cache["lat"][src])}
+
+
 def _mla_paged_gather(cache, tables, rank: int):
     """tables: (N,W) -> (ckv (N,W*bs,rank), krope (N,W*bs,rr)) in absolute
     position order — the materialising read of the parity-reference path."""

@@ -145,6 +145,18 @@ def block_paged_prefill(p, cfg, kind: str, x, cache, table, t0, n_valid,
     return x + o, nc
 
 
+def block_paged_copy(cfg, kind: str, cache, src, dst):
+    """Copy pool page ``src -> dst`` for one paged layer — the device side
+    of copy-on-write when a request must write into a block it shares with
+    siblings (prefix cache). Bounded (ring/recurrent) kinds have no pages
+    and never share, so only paged kinds dispatch here."""
+    if kind == "mla":
+        return mla.mla_paged_copy_block(cache, src, dst)
+    if kind == "global":
+        return attn.paged_copy_block(cache, src, dst)
+    raise ValueError(f"layer kind {kind!r} does not page")
+
+
 def block_apply(p, cfg, kind: str, x, positions, mode: str,
                 cache=None, pos=None, cache_len: int = 0):
     """Returns (x, new_cache, extras)."""

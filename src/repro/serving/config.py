@@ -22,6 +22,16 @@ class ServeConfig:
         Pallas), "pallas" (interpret-mode Pallas — CI validation), "jnp"
         (the lax.scan flash twin), or None to auto-select "tpu" on TPU and
         "jnp" elsewhere.
+
+    prefix_cache turns on prefix sharing (serving/prefixcache.py): common
+    block-aligned prompt prefixes are detected at admission, matched KV
+    blocks are adopted copy-on-write instead of re-prefilled, and the
+    prefix's recorded expert activations are replayed into the policy /
+    ExpertCache. ``prefix_cache_blocks`` soft-caps how many pool blocks the
+    index may keep alive (None -> bounded only by pool pressure; LRU
+    zero-extra-ref prefixes are evicted when admission needs their blocks
+    either way). Needs the chunk-prefill-capable paged engine; stacks with
+    ring/recurrent layers silently keep the cache off.
     """
     max_batch: int = 4
     paged: bool = True
@@ -30,6 +40,8 @@ class ServeConfig:
     prefill_chunk: int = 8
     use_kernel: bool = True
     kernel_backend: Optional[str] = None
+    prefix_cache: bool = False
+    prefix_cache_blocks: Optional[int] = None
 
     def resolve_kernel(self) -> Optional[str]:
         """The backend string the engine threads into jitted attention

@@ -101,6 +101,10 @@ class EngineStats:
     # kinds" gap. Excludes each prompt's final token (decode must run it to
     # produce the first sampled logits on every path).
     fallback_prefill_tokens: int = 0
+    # requests refused at admission because their worst case exceeds the
+    # whole pool (they retire immediately with an empty result instead of
+    # aborting the run)
+    rejected_requests: int = 0
 
     @property
     def hit_rate(self):
@@ -210,6 +214,11 @@ class DecodeCore:
             return T.block_paged_prefill(lp, cfg, kind, x, cache, table, t0,
                                          n_valid, kernel=kernel)
 
+        @partial(jax.jit, static_argnames=("kind",))
+        def paged_copy_fn(cache, src, dst, kind):
+            # one pool page src -> dst (copy-on-write for shared blocks)
+            return T.block_paged_copy(cfg, kind, cache, src, dst)
+
         @jax.jit
         def dense_ffn_half(lp, x):
             h = rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -251,6 +260,7 @@ class DecodeCore:
         self._attn = attn_batched
         self._paged_attn = paged_attn_step
         self._paged_prefill = paged_prefill_step
+        self._paged_copy = paged_copy_fn
         self._dense_ffn = dense_ffn_half
         self._router = router_fn
         self._expert = expert_from_slots
@@ -288,6 +298,19 @@ class DecodeCore:
         """Chunked prefill needs every layer's state reachable through block
         tables — ring/recurrent kinds fall back to token-by-token prompts."""
         return all(k in T.PAGED_KINDS for k in self.kinds)
+
+    def copy_block(self, caches, src: int, dst: int):
+        """Copy pool page ``src -> dst`` in every paged layer — the device
+        half of copy-on-write. The scheduler calls this right after
+        ``BlockTable.make_private`` swaps a shared block for a private one,
+        so the private block starts as a bit-identical copy."""
+        src_j = jnp.asarray(src, jnp.int32)
+        dst_j = jnp.asarray(dst, jnp.int32)
+        for li in range(self.cfg.num_layers):
+            if self.kinds[li] in T.PAGED_KINDS:
+                caches[li] = self._paged_copy(caches[li], src_j, dst_j,
+                                              kind=self.kinds[li])
+        return caches
 
     def paged_block_bytes(self, caches) -> int:
         """Device bytes ONE pool block occupies summed across paged layers —
@@ -430,8 +453,12 @@ class DecodeCore:
         to a power-of-two bucket (compiled once per bucket, like decode
         padding buckets); per-token math is identical to feeding the same
         tokens one-by-one through the decode path, so chunked prefill keeps
-        token-identical streams. Returns (logits (len(tokens), V) f32,
-        caches).
+        token-identical streams. ``t0`` may be nonzero with earlier
+        positions' KV already in the table's blocks (later chunks, or a
+        prefix-cache match skipping straight past the shared prefix).
+        Returns (logits (len(tokens), V) f32, caches, experts) — experts is
+        a per-MoE-layer list of per-token ground-truth expert-id arrays,
+        the raw material the prefix cache records for activation replay.
         """
         assert self.chunk_prefill_ok, \
             "chunked prefill needs a global/mla-only stack"
@@ -445,6 +472,7 @@ class DecodeCore:
         embeddings = self._tok_emb_np[np.asarray(tokens, np.int64)]
 
         x = self._embed_seq(self.params["tok_emb"], toks_p)      # (1,cb,D)
+        experts_out: List[List[np.ndarray]] = []
         self._submit_prefetch(policy, [rid], [t0], self._next_moe(0))
         for li in range(cfg.num_layers):
             lp = self.layers[li]
@@ -463,6 +491,7 @@ class DecodeCore:
                 xu = x[0][:, None, :]
                 xu, gts = self._moe_units(mi, lp, hu, wu, xu, idx_np, n)
                 x = xu[:, 0, :][None]
+                experts_out.append(gts)
                 if policy is not None:
                     policy.observe_batch([rid] * n, ts, mi, gts, embeddings)
                 self._submit_prefetch(policy, [rid], [t0 + n - 1],
@@ -474,7 +503,7 @@ class DecodeCore:
         self.stats.prefill_tokens += n
         self.stats.prefill_chunks += 1
         self._sync_stats()
-        return logits, caches
+        return logits, caches, experts_out
 
 
 class OffloadEngine:
@@ -529,6 +558,12 @@ class OffloadEngine:
 
     def generate(self, prompt, max_new: int, cache_len: int,
                  temperature: float = 0.0, seed: int = 0):
+        if len(prompt) == 0:
+            raise ValueError(
+                "empty prompt: generation needs at least one token to seed "
+                "the decode loop")
+        if max_new < 0:
+            raise ValueError(f"max_new must be >= 0, got {max_new}")
         state = self.init_state(cache_len)
         if self._prp is not None:
             self._prp.begin_request(0)

@@ -36,10 +36,28 @@ def blocks_for(num_positions: int, block_size: int) -> int:
 
 @dataclass
 class PoolStats:
+    """Alloc/free traffic with sharing-aware symmetry.
+
+    Once blocks are shared (prefix cache), "free" is ambiguous: dropping a
+    reference and returning a block to the free list are different events
+    that only coincide at refcount 1. The counters keep two exact
+    invariants, checked by ``KVBlockPool.check_leaks``:
+
+      ``allocs - releases  == blocks currently allocated``
+      ``allocs + retains - ref_drops == sum of current refcounts``
+    """
     allocs: int = 0
-    frees: int = 0
+    retains: int = 0             # extra references taken (prefix sharing)
+    ref_drops: int = 0           # free() calls: references dropped
+    releases: int = 0            # blocks actually returned to the free list
+    cow_copies: int = 0          # shared blocks privatised before a write
     failed_reserves: int = 0     # admission attempts refused for lack of blocks
     high_water: int = 0          # max blocks simultaneously in use
+
+    @property
+    def frees(self) -> int:
+        """Back-compat alias for ``releases`` (pre-sharing name)."""
+        return self.releases
 
     def utilization(self, num_blocks: int) -> float:
         """Peak fraction of allocatable blocks ever in use."""
@@ -130,6 +148,15 @@ class KVBlockPool:
         if bid not in self._ref:
             raise RuntimeError(f"retain of unallocated block {bid}")
         self._ref[bid] += 1
+        self.stats.retains += 1
+
+    def ref_count(self, bid: int) -> int:
+        """Current reference count (0 for free/unallocated blocks)."""
+        return self._ref.get(bid, 0)
+
+    def is_shared(self, bid: int) -> bool:
+        """More than one holder — writes must copy-on-write first."""
+        return self._ref.get(bid, 0) > 1
 
     def free(self, bid: int) -> None:
         """Drop one reference; the block returns to the free list at zero.
@@ -137,14 +164,19 @@ class KVBlockPool:
         if bid not in self._ref:
             raise RuntimeError(f"double free of block {bid}")
         self._ref[bid] -= 1
+        self.stats.ref_drops += 1
         if self._ref[bid] == 0:
             del self._ref[bid]
             self._free.append(bid)
-            self.stats.frees += 1
+            self.stats.releases += 1
 
-    def check_leaks(self) -> None:
-        """Invariant check: every block is either free or refcounted, and
-        scratch is never handed out."""
+    def check_leaks(self, expected_in_use: int | None = None) -> None:
+        """Invariant check: every block is either free or refcounted, scratch
+        is never handed out, and the stats counters balance the live state.
+
+        ``expected_in_use`` pins how many blocks may legitimately still be
+        allocated — e.g. the blocks a prefix cache retains after every
+        request has retired. ``None`` skips that check (mid-run callers)."""
         assert SCRATCH_BLOCK not in self._ref
         assert SCRATCH_BLOCK not in self._free
         overlap = set(self._free) & set(self._ref)
@@ -153,17 +185,33 @@ class KVBlockPool:
         assert total == self.num_blocks - 1, (
             f"leak: {self.num_blocks - 1 - total} blocks unaccounted for")
         assert 0 <= self._reserved <= self.num_free
+        s = self.stats
+        assert s.allocs - s.releases == len(self._ref), (
+            f"alloc/release asymmetry: {s.allocs} allocs, {s.releases} "
+            f"releases, {len(self._ref)} blocks live")
+        assert s.allocs + s.retains - s.ref_drops == \
+            sum(self._ref.values()), "refcount ledger out of balance"
+        if expected_in_use is not None:
+            assert len(self._ref) == expected_in_use, (
+                f"{len(self._ref)} blocks still allocated, expected "
+                f"{expected_in_use}")
 
 
 class BlockTable:
     """Ordered per-request block list; logical block ``i`` covers positions
     ``[i*block_size, (i+1)*block_size)``. Grows lazily via :meth:`ensure`,
-    drawing on the request's admission reservation first."""
+    drawing on the request's admission reservation first.
+
+    Blocks adopted from a prefix cache (:meth:`adopt`) are **shared and
+    read-only**: before scattering K/V into one, the engine must call
+    :meth:`make_private`, which swaps in a freshly-allocated block
+    (copy-on-write) so a writer can never corrupt a sibling's KV."""
 
     def __init__(self, pool: KVBlockPool, reserved_blocks: int = 0):
         self.pool = pool
         self.ids: List[int] = []
         self._reserved = reserved_blocks
+        self._shared: set[int] = set()       # logical indices, read-only
 
     def __len__(self) -> int:
         return len(self.ids)
@@ -186,6 +234,51 @@ class BlockTable:
             if use_res:
                 self._reserved -= 1
 
+    def return_reservation(self, n: int = 1) -> None:
+        """Hand back up to ``n`` still-unused promised blocks (e.g. after
+        adopting a shared block this table will now never allocate)."""
+        n = min(n, self._reserved)
+        if n > 0:
+            self.pool.unreserve(n)
+            self._reserved -= n
+
+    # -- prefix sharing ----------------------------------------------------
+    def adopt(self, bids) -> None:
+        """Append already-allocated blocks (a matched prompt prefix) to the
+        table, taking one reference each. Adopted blocks are marked shared
+        (read-only) until :meth:`make_private` copies them."""
+        for bid in bids:
+            self.pool.retain(bid)
+            self._shared.add(len(self.ids))
+            self.ids.append(bid)
+
+    def is_shared(self, idx: int) -> bool:
+        """True when logical block ``idx`` is adopted and still read-only."""
+        return idx in self._shared
+
+    def make_private(self, idx: int):
+        """Copy-on-write: give logical block ``idx`` a private block id
+        before a write lands in it.
+
+        Returns ``(old_bid, new_bid)`` when the caller must copy the device
+        page ``old_bid -> new_bid``, or ``None`` when no copy is needed (the
+        block is not shared, or every other holder has since let go — then
+        this table simply takes exclusive ownership)."""
+        if idx not in self._shared:
+            return None
+        self._shared.discard(idx)
+        old = self.ids[idx]
+        if not self.pool.is_shared(old):
+            return None                       # sole holder: already private
+        use_res = self._reserved > 0
+        new = self.pool.alloc(reserved=use_res)
+        if use_res:
+            self._reserved -= 1
+        self.ids[idx] = new
+        self.pool.free(old)                   # drop our shared reference
+        self.pool.stats.cow_copies += 1
+        return old, new
+
     def padded(self, width: int):
         """int32 array of ``width`` block ids, scratch-padded — the shape-
         stable table row jitted paged attention consumes."""
@@ -198,10 +291,12 @@ class BlockTable:
         return out
 
     def release(self) -> None:
-        """Free all blocks and return any unused reservation."""
+        """Free all blocks (shared ones just drop this table's reference)
+        and return any unused reservation."""
         for bid in self.ids:
             self.pool.free(bid)
         self.ids = []
+        self._shared.clear()
         if self._reserved:
             self.pool.unreserve(self._reserved)
             self._reserved = 0

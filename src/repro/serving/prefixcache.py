@@ -1,0 +1,248 @@
+"""Prefix-sharing KV cache: a radix index over block-aligned token runs.
+
+Heavy traffic shares prompt structure — system prompts, few-shot templates,
+chat history. This module lets the paged scheduler detect that sharing and
+map it onto the refcounted blocks ``serving/kvpool.py`` already supports:
+
+* The index is a **trie keyed on whole blocks of tokens**: a node at depth
+  ``d`` is identified by the path ``tokens[0 : (d+1)*block_size]`` and holds
+  the pool block id whose KV covers positions ``[d*bs, (d+1)*bs)`` of that
+  token run, plus the per-MoE-layer expert sets observed when those
+  positions were originally prefilled (the **expert-activation replay**
+  payload — a prefix hit warms the ExpertCache without running the
+  predictor, reuse complementing prediction).
+* The cache holds **one reference** per indexed block. Requests that match
+  a prefix ``retain`` the blocks into their own ``BlockTable`` (via
+  ``BlockTable.adopt``), so an indexed block is pinned while any request
+  reads it and survives the request's retirement.
+* Shared blocks are **read-only**; a matched request that must write into a
+  partially-used shared block (its prompt ends mid-block) copies it first —
+  ``BlockTable.make_private`` plus the engine's device-page copy.
+* **Eviction** under pool pressure walks least-recently-used *leaves* whose
+  block has no holder besides the cache itself (``ref_count == 1``); inner
+  nodes are never evicted before their children, so a cached path always
+  proves token equality for every block above a match.
+
+The index stores ids, not tensors — the KV bytes live in the pool either
+way, so a cached prefix costs nothing beyond the blocks it keeps alive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.kvpool import KVBlockPool, blocks_for
+
+
+@dataclass
+class PrefixStats:
+    hits: int = 0                # admissions that matched >= 1 block
+    misses: int = 0              # admissions that matched nothing
+    hit_tokens: int = 0          # prompt positions whose prefill was skipped
+    extensions: int = 0          # blocks adopted at a mid-prefill boundary
+    inserted_blocks: int = 0     # blocks newly indexed
+    evicted_blocks: int = 0      # indexed blocks freed under pool pressure
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+
+class _Node:
+    """One cached block: trie child key is the block's token tuple."""
+
+    __slots__ = ("bid", "experts", "children", "parent", "tick")
+
+    def __init__(self, bid: int, experts: Dict[int, np.ndarray],
+                 parent: Optional["_Node"]):
+        self.bid = bid
+        self.experts = experts          # moe-layer ordinal -> expert ids
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.tick = 0
+
+
+@dataclass
+class PrefixMatch:
+    """Admission-time match result: ``bids`` cover prompt positions
+    ``[0, tokens)`` (the last block possibly only partially — the adopter
+    COWs it before writing); ``experts`` is the union of the matched nodes'
+    recorded activations, keyed by MoE-layer ordinal."""
+    bids: List[int] = field(default_factory=list)
+    tokens: int = 0
+    experts: Dict[int, np.ndarray] = field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return self.tokens > 0
+
+
+def _merge_experts(dsts: Dict[int, set], src: Dict[int, np.ndarray]) -> None:
+    for mi, ids in src.items():
+        dsts.setdefault(mi, set()).update(int(e) for e in ids)
+
+
+class PrefixCache:
+    """Radix index from block-aligned prompt prefixes to retained block ids.
+
+    ``max_blocks`` soft-caps how many blocks the index may keep alive:
+    after an insert pushes past it, LRU zero-extra-ref leaves are evicted
+    back to the cap (blocks other requests still hold stay indexed, so the
+    cap can be transiently exceeded while holders are live).
+    """
+
+    def __init__(self, pool: KVBlockPool,
+                 max_blocks: Optional[int] = None):
+        self.pool = pool
+        self.bs = pool.block_size
+        self.max_blocks = max_blocks
+        self.root = _Node(-1, {}, None)
+        self._nodes = 0
+        self._tick = 0
+        self.stats = PrefixStats()
+
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks the index currently keeps a reference to."""
+        return self._nodes
+
+    # ------------------------------------------------------------------
+    def _key(self, tokens: Sequence[int], d: int) -> Tuple[int, ...]:
+        return tuple(tokens[d * self.bs: (d + 1) * self.bs])
+
+    def walk(self, tokens: Sequence[int], max_blocks: int) -> List[_Node]:
+        """Longest indexed path along ``tokens``: nodes for blocks
+        ``0..len(result)-1``, stopping at the first un-indexed block or at
+        ``max_blocks``. Only whole blocks participate (the trie is keyed on
+        full ``block_size`` runs)."""
+        out: List[_Node] = []
+        node = self.root
+        whole = len(tokens) // self.bs
+        for d in range(min(max_blocks, whole)):
+            node = node.children.get(self._key(tokens, d))
+            if node is None:
+                break
+            out.append(node)
+        return out
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Sequence[int], limit: int) -> PrefixMatch:
+        """Admission-time lookup: the longest indexed prefix of ``tokens``,
+        capped at ``limit`` positions (the scheduler passes the last
+        position the request must still process itself, so a full-prompt
+        hit never swallows the token whose logits seed decoding).
+
+        Matched nodes are LRU-touched. The caller adopts ``bids`` into the
+        request's table (which takes the references) — nothing here can
+        evict between match and adopt because the scheduler is
+        single-threaded. Hit/miss/token stats are the *scheduler's* to
+        count (at successful admission): a request can be matched many
+        times while it waits for block reservations."""
+        if limit <= 0:
+            return PrefixMatch()
+        nodes = self.walk(tokens, blocks_for(limit, self.bs))
+        m = min(len(nodes) * self.bs, limit)
+        nodes = nodes[:blocks_for(m, self.bs)]
+        if not nodes:
+            return PrefixMatch()
+        merged: Dict[int, set] = {}
+        for node in nodes:
+            self._touch(node)
+            _merge_experts(merged, node.experts)
+        return PrefixMatch(
+            bids=[n.bid for n in nodes], tokens=m,
+            experts={mi: np.array(sorted(s), np.int64)
+                     for mi, s in merged.items()})
+
+    def extend(self, tokens: Sequence[int], depth: int) -> Optional[_Node]:
+        """Mid-prefill extension: the node for block ``depth`` of
+        ``tokens``, if the whole path to it is indexed — lets a request
+        that missed at admission adopt blocks a sibling publishes while
+        both are in flight (same-wave sharing). LRU-touches the node."""
+        nodes = self.walk(tokens, depth + 1)
+        if len(nodes) <= depth:
+            return None
+        self._touch(nodes[depth])
+        self.stats.extensions += 1
+        return nodes[depth]
+
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], n_blocks: int,
+               bids: Sequence[int],
+               experts_by_block: Dict[int, Dict[int, set]]) -> int:
+        """Index blocks ``0..n_blocks-1`` of ``tokens`` (each must be a
+        whole block of *prompt* positions whose KV ``bids`` holds). Blocks
+        already indexed are kept (first writer wins — their KV is
+        identical by construction); new nodes retain their block. Returns
+        the number of blocks newly indexed. Idempotent."""
+        node = self.root
+        added = 0
+        for d in range(n_blocks):
+            key = self._key(tokens, d)
+            child = node.children.get(key)
+            if child is None:
+                bid = bids[d]
+                self.pool.retain(bid)
+                exp = {mi: np.array(sorted(s), np.int64)
+                       for mi, s in experts_by_block.get(d, {}).items()}
+                child = _Node(bid, exp, node)
+                node.children[key] = child
+                self._nodes += 1
+                added += 1
+                self.stats.inserted_blocks += 1
+            self._touch(child)
+            node = child
+        self.enforce_cap()
+        return added
+
+    def enforce_cap(self) -> None:
+        """Evict back down to ``max_blocks``. Called after inserts and after
+        a holder releases its references — insert-time enforcement alone
+        could never shed blocks the inserting request itself still held."""
+        if self.max_blocks is not None and self._nodes > self.max_blocks:
+            self.evict(self._nodes - self.max_blocks)
+
+    # ------------------------------------------------------------------
+    def _evictable(self, exclude) -> List[Tuple[Tuple[int, ...], _Node]]:
+        """LRU-ordered leaves whose block has no holder but the cache."""
+        out = []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for key, child in node.children.items():
+                if child.children:
+                    stack.append(child)
+                elif (self.pool.ref_count(child.bid) == 1
+                      and child.bid not in exclude):
+                    out.append((key, child))
+        out.sort(key=lambda kv: kv[1].tick)
+        return out
+
+    def evict(self, n_blocks: int, exclude=()) -> int:
+        """Free up to ``n_blocks`` indexed blocks (LRU leaves first,
+        re-walking as parents become leaves). Blocks other requests still
+        reference are skipped — evicting them would free nothing anyway.
+        ``exclude`` protects block ids a caller has matched but not yet
+        adopted (their only reference is the index's, so nothing else
+        marks them live). Returns how many blocks actually went back to
+        the pool."""
+        exclude = set(exclude)
+        freed = 0
+        while freed < n_blocks:
+            victims = self._evictable(exclude)
+            if not victims:
+                break
+            for key, node in victims:
+                if freed >= n_blocks:
+                    break
+                node.parent.children.pop(key)
+                self.pool.free(node.bid)
+                self._nodes -= 1
+                freed += 1
+                self.stats.evicted_blocks += 1
+        return freed

@@ -18,8 +18,18 @@ first decode token. ``paged=False`` keeps the PR-1 row path (fixed-length
 KV rows, prompts streamed token-by-token through decode) as the contiguous
 fallback and benchmark baseline.
 
+With ``prefix_cache=True`` admission also walks a radix index of
+block-aligned prompt prefixes (serving/prefixcache.py): matched KV blocks
+are ``retain``-ed into the new request's table copy-on-write instead of
+re-prefilled (chunked prefill starts at the first unmatched position), the
+prefix's recorded expert activations are replayed to warm the ExpertCache,
+and requests still mid-prefill adopt blocks a sibling publishes at every
+chunk boundary — so even a same-wave burst of identical system prompts
+prefills the shared prefix exactly once.
+
 Per-request token streams are identical to the batch-1 ``OffloadEngine``
-— tests pin paged-vs-batch-1 parity across ragged prompt lengths.
+— tests pin paged-vs-batch-1 parity across ragged prompt lengths, with the
+prefix cache on and off.
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ from repro.core.policies import PerRequestPolicy, Policy
 from repro.serving.config import ServeConfig
 from repro.serving.engine import DecodeCore, EngineStats, sample_token
 from repro.serving.kvpool import BlockTable, KVBlockPool, blocks_for
+from repro.serving.prefixcache import PrefixCache, PrefixMatch
 
 
 @dataclass
@@ -54,6 +65,10 @@ class Request:
     lane: int = -1             # row for bounded per-row state
     admit_s: float = 0.0       # perf_counter at admission
     first_token_s: float = -1.0  # perf_counter at first sampled token
+    # per-block expert activations observed while processing prompt
+    # positions (block index -> MoE-layer ordinal -> expert ids) — what the
+    # prefix cache stores for activation replay on a future hit
+    block_experts: Dict[int, Dict[int, set]] = field(default_factory=dict)
 
     def start(self, cache_len: int) -> None:
         self.t = 0
@@ -113,13 +128,17 @@ class BatchedOffloadEngine:
                  block_size: int = 8, kv_blocks: Optional[int] = None,
                  prefill_chunk: int = 8, use_kernel: bool = True,
                  kernel_backend: Optional[str] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_blocks: Optional[int] = None,
                  serve: Optional[ServeConfig] = None):
         if serve is None:
             serve = ServeConfig(max_batch=max_batch, paged=paged,
                                 block_size=block_size, kv_blocks=kv_blocks,
                                 prefill_chunk=prefill_chunk,
                                 use_kernel=use_kernel,
-                                kernel_backend=kernel_backend)
+                                kernel_backend=kernel_backend,
+                                prefix_cache=prefix_cache,
+                                prefix_cache_blocks=prefix_cache_blocks)
         self.serve = serve
         max_batch = serve.max_batch
         need = max_batch * model.cfg.moe.top_k
@@ -142,6 +161,13 @@ class BatchedOffloadEngine:
         self.block_size = serve.block_size
         self.kv_blocks = serve.kv_blocks
         self.pool: Optional[KVBlockPool] = None
+        # prefix sharing rides on chunked prefill: every layer's state must
+        # be reachable through block tables for a matched prefix to stand in
+        # for prefill (ring/recurrent rows are per-lane, not shareable)
+        self.prefix_enabled = (serve.prefix_cache and self.paged
+                               and self.core.chunk_prefill_ok)
+        self.prefix_cache_blocks = serve.prefix_cache_blocks
+        self.prefix: Optional[PrefixCache] = None   # built per run
         self.kv_block_bytes = 0          # device bytes per block, set by run
         self._policy = None if policy is None else PerRequestPolicy(policy)
         self._queue: deque[Request] = deque()
@@ -177,10 +203,16 @@ class BatchedOffloadEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new: int,
                temperature: float = 0.0, seed: int = 0) -> int:
+        prompt = [int(p) for p in prompt]
+        if not prompt:
+            raise ValueError(
+                "empty prompt: a request needs at least one token to seed "
+                "decoding")
+        if max_new < 0:
+            raise ValueError(f"max_new must be >= 0, got {max_new}")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, [int(p) for p in prompt], max_new,
-                                   temperature, seed))
+        self._queue.append(Request(rid, prompt, max_new, temperature, seed))
         return rid
 
     def run(self, cache_len: int) -> Dict[int, List[int]]:
@@ -198,14 +230,23 @@ class BatchedOffloadEngine:
         results: Dict[int, List[int]] = {}
         while self._queue or any(r is not None for r in rows):
             for s in range(self.max_batch):          # admission
-                if rows[s] is None and self._queue:
+                while rows[s] is None and self._queue:
                     req = self._queue.popleft()
                     req.start(cache_len)
                     req.admit_s = time.perf_counter()
+                    if req.done:
+                        # degenerate (cache_len admits zero steps): retire
+                        # before ever stepping — pinned to match the paged
+                        # engine's immediate-retire behavior
+                        results[req.rid] = req.generated
+                        self._record_ttft(req)
+                        continue
                     rows[s] = req
                     if self._policy is not None:
                         self._policy.begin_request(req.rid)
             active = [(s, r) for s, r in enumerate(rows) if r is not None]
+            if not active:
+                continue
             self._count_fallback(r for _, r in active)
             logits, caches, _ = self.core.step(
                 caches,
@@ -228,35 +269,88 @@ class BatchedOffloadEngine:
     def _admit_paged(self, lanes: List[Optional[Request]], cache_len: int,
                      results: Dict[int, List[int]]) -> None:
         """Admit while a lane is free AND the pool can reserve the request's
-        worst-case block count — block-granular admission, no preemption."""
+        worst-case block count — block-granular admission, no preemption.
+
+        With the prefix cache on, admission first walks the radix index:
+        matched blocks are adopted (retained, copy-on-write) instead of
+        reserved, chunked prefill starts at the first unmatched position,
+        and the prefix's recorded expert activations are replayed. A
+        request whose worst case exceeds the *whole* pool is rejected
+        gracefully (empty result + ``EngineStats.rejected_requests``)
+        rather than aborting the run with lanes held and blocks leaked."""
+        bs = self.block_size
         for lane in range(self.max_batch):
-            if lanes[lane] is not None or not self._queue:
-                continue
-            req = self._queue[0]
-            n_total = min(len(req.prompt) + req.max_new, cache_len)
-            need = blocks_for(n_total, self.block_size)
-            if need > self.pool.num_blocks - 1:
-                raise ValueError(
-                    f"request {req.rid} needs {need} KV blocks but the pool "
-                    f"holds {self.pool.num_blocks - 1}: raise kv_blocks or "
-                    "lower cache_len")
-            if not self.pool.try_reserve(need):
-                break                                # FIFO: don't starve
-            self._queue.popleft()
-            req.start(cache_len)
-            req.admit_s = time.perf_counter()
-            req.table = BlockTable(self.pool, need)
-            req.lane = lane
-            # positions a prefill program may absorb: everything up to (not
-            # including) the position whose logits the first sample needs
-            req.prefill_end = (min(len(req.prompt) - 1, req.n_total)
-                               if self.core.chunk_prefill_ok else 0)
-            lanes[lane] = req
-            if self._policy is not None:
-                self._policy.begin_request(req.rid)
-            if req.prefill_end == 0 and req.done:
-                # degenerate: cache_len admits zero steps
-                self._retire(lanes, req, results)
+            while lanes[lane] is None and self._queue:
+                req = self._queue[0]
+                n_total = min(len(req.prompt) + req.max_new, cache_len)
+                # the request must process at least the position whose
+                # logits seed sampling, so a match may cover at most
+                # min(len(prompt), n_total) - 1 positions
+                match = (self.prefix.match(req.prompt,
+                                           min(len(req.prompt), n_total) - 1)
+                         if self.prefix is not None else PrefixMatch())
+                # a match ending mid-block COWs that block on first write:
+                # one extra allocation beyond the unmatched remainder
+                need = (blocks_for(n_total, bs) - len(match.bids)
+                        + (1 if match.tokens % bs else 0))
+                if blocks_for(n_total, bs) > self.pool.num_blocks - 1:
+                    # the FULL footprint is what must fit live (matched
+                    # blocks stay allocated too): reject on it, not on the
+                    # match-reduced reservation, or an impossible request
+                    # would first wipe the index via the fallback below
+                    self._queue.popleft()            # reject, keep running
+                    results[req.rid] = []
+                    self.core.stats.rejected_requests += 1
+                    continue
+                if not self.pool.try_reserve(need):
+                    # pool pressure may be cached prefixes nobody holds —
+                    # evict zero-extra-ref LRU prefixes (NOT the blocks we
+                    # just matched: until adopted, the index's reference is
+                    # their only one, so eviction would free them out from
+                    # under the pending adopt) and retry
+                    if self.prefix is None:
+                        return                       # FIFO: don't starve
+                    self.prefix.evict(need - self.pool.available,
+                                      exclude=match.bids)
+                    if not self.pool.try_reserve(need):
+                        if not match:
+                            return
+                        # the protected match itself may BE the pressure:
+                        # give it up and admit as a plain full-prefill
+                        # request (guaranteed to fit once lanes drain —
+                        # the whole-pool reject above already ran)
+                        match = PrefixMatch()
+                        need = blocks_for(n_total, bs)
+                        self.prefix.evict(need - self.pool.available)
+                        if not self.pool.try_reserve(need):
+                            return
+                self._queue.popleft()
+                req.start(cache_len)
+                req.admit_s = time.perf_counter()
+                req.table = BlockTable(self.pool, need)
+                req.lane = lane
+                if self._policy is not None:
+                    self._policy.begin_request(req.rid)
+                if match:
+                    req.table.adopt(match.bids)
+                    req.t = match.tokens             # prefill starts here
+                    self.prefix.stats.hits += 1
+                    self.prefix.stats.hit_tokens += match.tokens
+                    self._replay(req, match.experts)
+                elif self.prefix is not None:
+                    self.prefix.stats.misses += 1
+                # positions a prefill program may absorb: everything up to
+                # (not including) the position whose logits the first
+                # sample needs
+                req.prefill_end = (min(len(req.prompt) - 1, req.n_total)
+                                   if self.core.chunk_prefill_ok else 0)
+                lanes[lane] = req
+                if req.done:
+                    # degenerate: cache_len admits zero steps
+                    self._retire(lanes, req, results)
+                elif not req.prefilling and req.t > 0:
+                    # full-prefix hit: go straight to decoding the tail
+                    req.cur = int(req.prompt[req.t])
 
     def _count_fallback(self, active) -> None:
         """Prompt tokens fed through a decode step that chunked prefill
@@ -269,17 +363,95 @@ class BatchedOffloadEngine:
     def _retire(self, lanes, req: Request, results) -> None:
         results[req.rid] = req.generated
         self._record_ttft(req)
+        self._insert_prefix(req)         # index prompt blocks before release
         req.table.release()
+        if self.prefix is not None:
+            self.prefix.enforce_cap()    # our refs gone: cap is enforceable
         lanes[req.lane] = None
         if self._policy is not None:
             self._policy.end_request(req.rid)
+
+    # -- prefix sharing ------------------------------------------------
+    def _replay(self, req: Request, experts_by_layer) -> None:
+        """Warm the ExpertCache with a matched prefix's recorded expert
+        activations and feed them to the request's policy as observations —
+        the hit skipped the prefill that would have produced both."""
+        if not experts_by_layer:
+            return
+        for mi in sorted(experts_by_layer):
+            self.core.cache.prefetch(
+                (mi, int(e)) for e in experts_by_layer[mi])
+        if self._policy is not None:
+            self._policy.replay_prefix(req.rid, experts_by_layer)
+
+    def _record_experts(self, req: Request, t0: int, experts) -> None:
+        """Accumulate per-block activation sets for prompt positions
+        ``t0 + j`` — ``experts`` is per-MoE-layer, per-token id arrays."""
+        bs = self.block_size
+        plen = len(req.prompt)
+        for mi, per_tok in enumerate(experts):
+            for j, ids in enumerate(per_tok):
+                p = t0 + j
+                if p >= plen:
+                    break
+                blk = req.block_experts.setdefault(p // bs, {})
+                blk.setdefault(mi, set()).update(int(e) for e in ids)
+
+    def _insert_prefix(self, req: Request) -> None:
+        """Publish the request's completed whole-prompt blocks into the
+        radix index (idempotent; already-indexed blocks are kept)."""
+        if self.prefix is None or req.table is None:
+            return
+        n_blocks = min(len(req.prompt), req.t) // self.block_size
+        if n_blocks > 0:
+            self.prefix.insert(req.prompt, n_blocks, req.table.ids,
+                               req.block_experts)
+
+    def _extend_prefix(self, req: Request) -> None:
+        """At a chunk boundary, adopt blocks a sibling has published since
+        this request was admitted — the same-wave sharing path: a burst of
+        identical prompts admitted together still prefills each shared
+        block exactly once."""
+        bs = self.block_size
+        while (req.prefilling and req.t % bs == 0
+               and len(req.table) == req.t // bs):
+            node = self.prefix.extend(req.prompt, req.t // bs)
+            if node is None:
+                break
+            req.table.adopt([node.bid])
+            end = min(req.t + bs, req.prefill_end)
+            if end == req.t + bs:
+                # a whole adopted block is one allocation this request will
+                # never make — hand the reservation back to the pool now
+                req.table.return_reservation(1)
+            self.prefix.stats.hit_tokens += end - req.t
+            req.t = end
+            self._replay(req, node.experts)
+
+    def _cow(self, caches, req: Request, t0: int, n: int):
+        """Copy-on-write every shared block the write window
+        ``[t0, t0 + n)`` touches: swap in a private block id and duplicate
+        the device page so the scatter can't corrupt a sibling's KV."""
+        bs = self.block_size
+        for idx in range(t0 // bs, (t0 + n - 1) // bs + 1):
+            if idx < len(req.table.ids) and req.table.is_shared(idx):
+                swap = req.table.make_private(idx)
+                if swap is not None:
+                    caches = self.core.copy_block(caches, swap[0], swap[1])
+        return caches
 
     def _run_paged(self, cache_len: int) -> Dict[int, List[int]]:
         bs = self.block_size
         table_width = blocks_for(cache_len, bs)
         num_blocks = (self.kv_blocks if self.kv_blocks is not None
                       else self.max_batch * table_width + 1)
+        # cache_len=0 (every request degenerate-retires) still needs the
+        # scratch block plus one allocatable block for the pool to exist
+        num_blocks = max(num_blocks, 2)
         self.pool = KVBlockPool(num_blocks, bs)
+        # the index is per pool: block ids are meaningless across runs
+        self.prefix = (PrefixCache(self.pool, self.prefix_cache_blocks)
+                       if self.prefix_enabled else None)
         caches = self.core.alloc_paged_caches(num_blocks, bs)
         self.kv_block_bytes = self.core.paged_block_bytes(caches)
         lanes: List[Optional[Request]] = [None] * self.max_batch
@@ -292,13 +464,22 @@ class BatchedOffloadEngine:
             # decode step below — policy predictions submitted during these
             # chunks warm the ExpertCache before the first decode token
             for req in [r for r in lanes if r is not None and r.prefilling]:
-                n = min(self.prefill_chunk, req.prefill_end - req.t)
-                req.table.ensure(req.t + n - 1)
-                chunk = req.prompt[req.t: req.t + n]
-                _, caches = self.core.prefill_chunk(
-                    caches, req.table.padded(table_width), req.t, chunk,
-                    self._policy, req.rid)
-                req.t += n
+                if self.prefix is not None:
+                    self._extend_prefix(req)         # adopt siblings' blocks
+                if req.prefilling:
+                    n = min(self.prefill_chunk, req.prefill_end - req.t)
+                    caches = self._cow(caches, req, req.t, n)
+                    req.table.ensure(req.t + n - 1)
+                    chunk = req.prompt[req.t: req.t + n]
+                    _, caches, experts = self.core.prefill_chunk(
+                        caches, req.table.padded(table_width), req.t, chunk,
+                        self._policy, req.rid)
+                    if self.prefix is not None:
+                        self._record_experts(req, req.t, experts)
+                    req.t += n
+                    # publish completed blocks NOW: same-wave siblings pick
+                    # them up at their next chunk boundary
+                    self._insert_prefix(req)
                 if not req.prefilling:
                     if req.t >= req.n_total:         # truncated by cache_len
                         self._retire(lanes, req, results)
@@ -312,8 +493,9 @@ class BatchedOffloadEngine:
             self._count_fallback(active)
             for r in active:
                 r.table.ensure(r.t)
+                caches = self._cow(caches, r, r.t, 1)
             tables = np.stack([r.table.padded(table_width) for r in active])
-            logits, caches, _ = self.core.step(
+            logits, caches, experts_step = self.core.step(
                 caches,
                 rows=[r.lane for r in active],
                 pos=[r.t for r in active],
@@ -321,11 +503,16 @@ class BatchedOffloadEngine:
                 policy=self._policy,
                 rids=[r.rid for r in active],
                 tables=tables)
-            for r, lg in zip(active, logits):        # retire frees blocks
+            for r, lg, exp in zip(active, logits, experts_step):
+                if self.prefix is not None and r.t < len(r.prompt):
+                    # prompt tokens decoded (e.g. the final one) complete
+                    # blocks the index can still use
+                    self._record_experts(r, r.t, [[ids] for ids in exp])
                 r.feed_result(lg)
-                if r.done:
+                if r.done:                           # retire frees blocks
                     self._retire(lanes, r, results)
-        self.pool.check_leaks()
+        self.pool.check_leaks(expected_in_use=(
+            self.prefix.cached_blocks if self.prefix is not None else 0))
         return results
 
     # ------------------------------------------------------------------

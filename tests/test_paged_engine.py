@@ -124,8 +124,8 @@ def test_prefill_logits_match_decode_per_position(backbone):
     t0 = 0
     for chunk in (prompt[0:3], prompt[3:7], prompt[7:]):   # ragged chunks
         table.ensure(t0 + len(chunk) - 1)
-        lg, caches = core.prefill_chunk(caches, table.padded(6), t0,
-                                        chunk, None, rid=0)
+        lg, caches, _ = core.prefill_chunk(caches, table.padded(6), t0,
+                                           chunk, None, rid=0)
         got.extend(lg)
         t0 += len(chunk)
     for t, (a, b) in enumerate(zip(got, ref_logits)):

@@ -1,0 +1,549 @@
+"""Prefix-sharing KV cache: radix index mechanics, copy-on-write, expert
+replay, scheduler admission — and the shared-prefix parity suite (streams
+token-identical with the cache on and off, across stacks and read paths).
+
+Also pins the admission bugfixes that ride along: graceful rejection of
+impossible requests, ``submit([])`` validation, and degenerate-case parity
+between the paged and row engines.
+"""
+import numpy as np
+import pytest
+
+from repro.core.policies import MoEInfinityPolicy
+from repro.core.tracing import moe_layer_ids
+from repro.serving.engine import OffloadEngine
+from repro.serving.kvpool import BlockTable, KVBlockPool, blocks_for
+from repro.serving.prefixcache import PrefixCache
+from repro.serving.scheduler import BatchedOffloadEngine
+
+from helpers import tiny_backbone
+
+# 8 requests sharing a 24-token system prompt with ragged unique tails —
+# same-wave admissions (first max_batch) can only share via mid-prefill
+# extension; later waves hit at admission
+SYS = [7, 99, 23, 5, 81, 3, 250, 17, 44, 2, 9, 60, 31, 4, 77, 12,
+       8, 55, 20, 1, 33, 6, 90, 13]
+TAILS = [[11, 42], [200, 9, 71, 30], [5], [88, 14, 3, 97, 21, 50, 2],
+         [61, 7, 7], [110, 4], [19, 19, 19, 19, 19], [240]]
+PROMPTS = [SYS + t for t in TAILS]
+MAX_NEW = 5
+CACHE_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return tiny_backbone()
+
+
+@pytest.fixture(scope="module")
+def ref_streams(backbone):
+    """prefix_cache=False streams: the sharing-off reference."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                               block_size=4)
+    return eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+
+
+# ---------------------------------------------------------------------------
+# radix index unit mechanics (bare pool, no model)
+
+def _mk(num_blocks=32, bs=4):
+    pool = KVBlockPool(num_blocks, bs)
+    return pool, PrefixCache(pool)
+
+
+def _stash(pool, n):
+    """Simulate a retired request's blocks: allocated, refcount 1."""
+    return [pool.alloc() for _ in range(n)]
+
+
+def test_index_match_insert_roundtrip():
+    pool, pc = _mk(bs=4)
+    toks = list(range(40, 52))                       # 3 whole blocks
+    bids = _stash(pool, 3)
+    assert pc.insert(toks, 3, bids, {0: {0: {1, 2}}, 2: {1: {3}}}) == 3
+    assert pc.cached_blocks == 3
+    assert all(pool.ref_count(b) == 2 for b in bids)
+
+    m = pc.match(toks + [9, 9], limit=10)            # cap mid-block 3
+    assert m.tokens == 10 and m.bids == bids         # partial last block
+    assert m.experts[0].tolist() == [1, 2]
+    m2 = pc.match(toks[:8] + [999] * 8, limit=15)    # diverges at block 2
+    assert m2.tokens == 8 and m2.bids == bids[:2]
+    assert not pc.match([999] * 12, limit=11)
+    # idempotent re-insert of the same path adds nothing
+    assert pc.insert(toks, 3, bids, {}) == 0
+    for b in bids:
+        assert pool.ref_count(b) == 2
+
+
+def test_index_match_respects_limit_and_whole_blocks():
+    pool, pc = _mk(bs=4)
+    toks = list(range(8))
+    bids = _stash(pool, 2)
+    pc.insert(toks, 2, bids, {})
+    assert pc.match(toks, limit=0).tokens == 0       # nothing to skip
+    assert pc.match(toks, limit=3).tokens == 3       # partial first block
+    assert pc.match(toks, limit=3).bids == bids[:1]
+    assert pc.match(toks[:7], limit=7).tokens == 4   # block 2 not whole
+
+
+def test_index_eviction_lru_leaves_only():
+    pool, pc = _mk(num_blocks=12, bs=2)
+    a = _stash(pool, 2)
+    b = _stash(pool, 1)
+    pc.insert([1, 2, 3, 4], 2, a, {})                # path a0 -> a1
+    pc.insert([9, 9], 1, b, {})
+    for bid in a + b:
+        pool.free(bid)                               # "requests retired"
+    pc.match([1, 2, 3, 4], limit=4)                  # freshen path a
+    # leaf eviction: LRU leaf is b's node; a's inner node a0 is untouched
+    assert pc.evict(1) == 1
+    assert pool.ref_count(b[0]) == 0                 # back in the free list
+    assert pc.cached_blocks == 2
+    # a1 (leaf) goes before a0 (inner) even though a0 is older
+    assert pc.evict(2) == 2 and pc.cached_blocks == 0
+    pool.check_leaks(expected_in_use=0)
+
+
+def test_index_eviction_skips_blocks_with_holders():
+    pool, pc = _mk(num_blocks=8, bs=2)
+    bids = _stash(pool, 1)
+    pc.insert([5, 6], 1, bids, {})
+    t = BlockTable(pool)
+    t.adopt(bids)                                    # a live request holds it
+    pool.free(bids[0])                               # drop the stash ref
+    assert pc.evict(5) == 0                          # unevictable
+    t.release()
+    assert pc.evict(5) == 1
+    pool.check_leaks(expected_in_use=0)
+
+
+def test_block_table_cow():
+    pool = KVBlockPool(8, 2)
+    owner = _stash(pool, 1)
+    t = BlockTable(pool)
+    t.adopt(owner)
+    assert t.is_shared(0)
+    old, new = t.make_private(0)
+    assert (old, new) == (owner[0], t.ids[0]) and old != new
+    assert not t.is_shared(0)
+    assert pool.ref_count(owner[0]) == 1             # sibling unaffected
+    assert pool.stats.cow_copies == 1
+    # sole holder: adopting then privatising without siblings copies nothing
+    pool.free(owner[0])
+    t2 = BlockTable(pool)
+    t2.adopt([t.ids[0]])
+    t.release()
+    assert t2.make_private(0) is None                # took exclusive ownership
+    t2.release()
+    pool.check_leaks(expected_in_use=0)
+
+
+def test_pool_stats_split_symmetry():
+    """allocs counts every allocation, releases only zero-ref returns; the
+    ledger invariants hold through sharing (the pre-split counters could
+    not balance once a block had two holders)."""
+    pool = KVBlockPool(8, 2)
+    a = pool.alloc()
+    pool.retain(a)
+    pool.free(a)                                     # drop, not release
+    assert pool.stats.ref_drops == 1 and pool.stats.releases == 0
+    pool.check_leaks()                               # ledger balances mid-run
+    pool.free(a)
+    assert pool.stats.ref_drops == 2 and pool.stats.releases == 1
+    assert pool.stats.frees == pool.stats.releases   # back-compat alias
+    assert pool.stats.allocs == 1 and pool.stats.retains == 1
+    pool.check_leaks(expected_in_use=0)
+    with pytest.raises(AssertionError):
+        b = pool.alloc()
+        pool.check_leaks(expected_in_use=0)          # b is still live
+    pool.free(b)
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix parity: streams identical with the cache on and off
+
+def test_shared_prefix_parity_and_savings(backbone, ref_streams):
+    """The tentpole acceptance: 8 requests sharing a system prompt stream
+    token-identically with prefix_cache on, while prefill work and KV
+    high-water strictly drop and the pool stays leak-free."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    off = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                               block_size=4)
+    off.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    on = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                              block_size=4, prefix_cache=True)
+    outs = on.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref_streams
+    st = on.prefix.stats
+    assert st.hits > 0 and st.hit_tokens > 0
+    # later waves match the whole system prompt at admission; the first
+    # wave shares via chunk-boundary extension
+    assert st.hits + st.extensions >= len(PROMPTS) - 1
+    # prefill compute actually skipped, not just remapped
+    assert on.stats.prefill_tokens < off.stats.prefill_tokens
+    assert on.stats.prefill_tokens + st.hit_tokens >= \
+        off.stats.prefill_tokens
+    # shared blocks counted once: the working set shrinks
+    assert on.pool.stats.high_water < off.pool.stats.high_water
+    # leak-free with exactly the indexed blocks still alive
+    on.pool.check_leaks(expected_in_use=on.prefix.cached_blocks)
+    assert on.prefix.cached_blocks > 0
+
+
+def test_shared_prefix_parity_across_block_sizes(backbone, ref_streams):
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    for bs in (2, 3, 8):
+        eng = BatchedOffloadEngine(model, params, None, n_total,
+                                   max_batch=4, block_size=bs,
+                                   prefix_cache=True)
+        outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+        assert outs == ref_streams, f"diverged at block_size={bs}"
+        eng.pool.check_leaks(expected_in_use=eng.prefix.cached_blocks)
+
+
+def test_shared_prefix_parity_kernel_and_gather(backbone, ref_streams):
+    """COW pages and matched-offset prefill behave identically on the
+    flash-decode kernel route and the gather parity reference."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    for kw in ({"use_kernel": False}, {"kernel_backend": "jnp"}):
+        eng = BatchedOffloadEngine(model, params, None, n_total,
+                                   max_batch=4, block_size=4,
+                                   prefix_cache=True, **kw)
+        outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+        assert outs == ref_streams, f"diverged with {kw}"
+
+
+def test_shared_prefix_parity_gqa_stack(ref_streams):
+    """A pure-GQA global-attention MoE stack (no MLA): paged K/V pools COW
+    and share exactly like the latent pools."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("llama4-scout-17b-a16e").replace(
+        block_pattern=("global",), frontend=None)
+    assert set(cfg.layer_kinds()) == {"global"}
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))       # untrained: parity only
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    prompts = [p[:20] for p in PROMPTS[:6]]
+    base = BatchedOffloadEngine(model, params, None, n_total, max_batch=3,
+                                block_size=4)
+    refs = base.generate(prompts, max_new=4, cache_len=32)
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=3,
+                               block_size=4, prefix_cache=True)
+    outs = eng.generate(prompts, max_new=4, cache_len=32)
+    assert outs == refs
+    assert eng.prefix.stats.hits + eng.prefix.stats.extensions > 0
+    eng.pool.check_leaks(expected_in_use=eng.prefix.cached_blocks)
+
+
+def test_prefix_cache_gated_off_for_ring_stacks():
+    """Stacks with ring-buffer layers can't share KV through block tables;
+    the knob silently stays off instead of corrupting streams."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("llama4-scout-17b-a16e")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                               block_size=4, prefix_cache=True)
+    assert eng.paged and not eng.prefix_enabled
+    eng.generate([p[:6] for p in PROMPTS[:2]], max_new=3, cache_len=16)
+    assert eng.prefix is None
+
+
+def test_expert_replay_warms_cache_and_policy(backbone):
+    """A prefix hit replays the recorded activations: the ExpertCache sees
+    prefetches before the request computes anything, and rEAM-style policy
+    state is warmed without running a predictor."""
+    cfg, model, params, _ = backbone
+    e = cfg.moe.num_experts
+    n_moe = len(moe_layer_ids(cfg))
+    eng = BatchedOffloadEngine(
+        model, params, lambda: MoEInfinityPolicy([], n_moe, e, width=4),
+        n_moe * e, max_batch=1, block_size=4, prefix_cache=True)
+    # max_batch=1 serialises the requests within one run: the second can
+    # only share via an admission-time index hit (no same-wave extension)
+    outs = eng.generate([PROMPTS[0], PROMPTS[0]], max_new=MAX_NEW,
+                        cache_len=CACHE_LEN)
+    assert outs[1] == outs[0]                        # same prompt, greedy
+    assert eng.prefix.stats.hits >= 1
+    assert eng.prefix.stats.extensions == 0          # never co-resident
+    assert eng.prefix.stats.hit_tokens >= len(SYS)
+    # every indexed block carries the activations its prefill observed —
+    # the payload replayed into the ExpertCache / policy on a hit
+    nodes = eng.prefix.walk(PROMPTS[0], len(SYS) // 4)
+    assert nodes and all(n.experts for n in nodes)
+    assert all(len(ids) > 0 for n in nodes for ids in n.experts.values())
+
+
+def test_cow_partial_block_match_parity(backbone):
+    """Identical block-aligned prompts force a match into the middle of the
+    last shared block (m = len-1 is mid-block): the writer COWs the shared
+    page — including the device copy — and streams stay identical."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    prompt = (SYS + TAILS[3])[:28]                   # 7 whole blocks at bs=4
+    assert len(prompt) % 4 == 0
+    prompts = [prompt] * 3                           # 3rd hits at admission
+    off = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                               block_size=4)
+    ref = off.generate(prompts, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    on = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                              block_size=4, prefix_cache=True)
+    outs = on.generate(prompts, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref and ref[0] == ref[1] == ref[2]
+    assert on.pool.stats.cow_copies > 0              # shared page privatised
+    on.pool.check_leaks(expected_in_use=on.prefix.cached_blocks)
+
+
+def test_prefix_eviction_under_pool_pressure(backbone, ref_streams):
+    """A pool too small to hold every cached prefix: admission evicts
+    zero-extra-ref prefixes instead of deadlocking, streams stay identical,
+    and the final leak check accounts for what stayed indexed."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    bs = 4
+    # just above the longest single request's worst case: the index's
+    # accumulated tail blocks must be evicted for later admissions to fit
+    worst = blocks_for(min(max(len(p) for p in PROMPTS) + MAX_NEW,
+                           CACHE_LEN), bs)
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                               block_size=bs, kv_blocks=worst + 4,
+                               prefix_cache=True)
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref_streams
+    assert eng.prefix.stats.evicted_blocks > 0       # pressure really hit
+    eng.pool.check_leaks(expected_in_use=eng.prefix.cached_blocks)
+
+
+def test_matched_blocks_survive_admission_eviction(backbone):
+    """Regression: the admission evict-retry must not free the blocks the
+    pending match returned (until adopted, the index's reference is their
+    only one). Pool sized so the cached prefix IS the pool pressure: the
+    match is given up and the request admits as a plain prefill instead of
+    crashing ``run`` with a retain-of-freed-block error."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    bs = 4
+    prompt = SYS[:20]                                # 5 whole blocks
+    # worst case 6 blocks; pool of exactly 6 allocatable: after request 1
+    # caches 5 blocks, request 2's match (5 bids, need 2, 1 free) cannot
+    # be satisfied without evicting the matched path itself
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=1,
+                               block_size=bs, kv_blocks=7,
+                               prefix_cache=True)
+    outs = eng.generate([prompt, prompt], max_new=4, cache_len=24)
+    assert outs[0] == outs[1]
+    assert eng.prefix.stats.evicted_blocks > 0       # pressure path taken
+    eng.pool.check_leaks(expected_in_use=eng.prefix.cached_blocks)
+
+    # ample pool: same prompts, match survives — parity across both paths
+    ample = BatchedOffloadEngine(model, params, None, n_total, max_batch=1,
+                                 block_size=bs, prefix_cache=True)
+    assert ample.generate([prompt, prompt], max_new=4,
+                          cache_len=24) == outs
+
+
+def test_prefix_cache_blocks_cap(backbone, ref_streams):
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=4,
+                               block_size=4, prefix_cache=True,
+                               prefix_cache_blocks=4)
+    outs = eng.generate(PROMPTS, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref_streams
+    # holders can transiently exceed the cap; at rest it is enforced
+    assert eng.prefix.cached_blocks <= 4
+
+
+# ---------------------------------------------------------------------------
+# admission bugfixes
+
+def test_impossible_request_rejected_gracefully(backbone):
+    """A request whose worst case exceeds the whole pool used to raise
+    mid-run, abandoning every in-flight request with lanes held and blocks
+    unreleased. Now: empty result, counted, run continues, no leaks."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    bs = 4
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                               block_size=bs,
+                               kv_blocks=blocks_for(8, bs) + 1)
+    ok1 = eng.submit(PROMPTS[0][:5], max_new=3)      # worst case 2 blocks
+    big = eng.submit(PROMPTS[1][:8], max_new=40)     # worst case > pool
+    ok2 = eng.submit(PROMPTS[2][:5], max_new=3)      # must still run
+    results = eng.run(cache_len=16)
+    assert results[big] == []
+    assert eng.stats.rejected_requests == 1
+    assert len(results[ok1]) > 0 and len(results[ok2]) > 0
+    eng.pool.check_leaks(expected_in_use=0)
+
+    # parity: the same fitting requests through an ample pool
+    ref = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                               block_size=bs)
+    r1 = ref.submit(PROMPTS[0][:5], max_new=3)
+    r2 = ref.submit(PROMPTS[2][:5], max_new=3)
+    ref_results = ref.run(cache_len=16)
+    assert results[ok1] == ref_results[r1]
+    assert results[ok2] == ref_results[r2]
+
+
+def test_impossible_matched_request_rejected_without_wiping_index(backbone):
+    """Regression: the whole-pool reject must use the request's FULL
+    footprint, not the match-reduced reservation — otherwise an impossible
+    request slips past the check and the eviction fallback destroys every
+    cached prefix before it is finally rejected anyway."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    base = (SYS + TAILS[3] + SYS)[:40]               # 10 whole blocks
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=1,
+                               block_size=4, kv_blocks=11,
+                               prefix_cache=True)
+    ok = eng.submit(base, max_new=0)                 # footprint exactly 10
+    big = eng.submit(base + TAILS[1], max_new=4)     # 12 blocks > pool
+    results = eng.run(cache_len=52)
+    assert results[big] == [] and eng.stats.rejected_requests == 1
+    assert len(results[ok]) > 0
+    assert eng.prefix.cached_blocks == 10            # index survived
+    eng.pool.check_leaks(expected_in_use=eng.prefix.cached_blocks)
+
+
+def test_submit_validation(backbone):
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    eng = BatchedOffloadEngine(model, params, None, n_total, max_batch=2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], max_new=4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit([1, 2], max_new=-1)
+    one = OffloadEngine(model, params, None, n_total)
+    with pytest.raises(ValueError, match="empty prompt"):
+        one.generate([], max_new=4, cache_len=16)
+
+
+def test_degenerate_cases_pinned_identical(backbone):
+    """max_new=0, cache_len=0, and cache_len-truncated prompts retire the
+    same way on the paged and row engines."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    cases = [
+        ([3, 17, 5], 0, 24),        # max_new=0
+        ([3], 0, 24),               # one-token prompt, max_new=0
+        ([3, 17, 5], 4, 0),         # cache_len=0: zero steps admitted
+        ([3], 4, 0),
+        ([3, 17, 5, 9, 11], 4, 3),  # truncated mid-prompt
+        ([3, 17, 5], 4, 3),         # cache_len == len(prompt)
+    ]
+    for prompt, max_new, cache_len in cases:
+        paged = BatchedOffloadEngine(model, params, None, n_total,
+                                     max_batch=2, block_size=4)
+        rows = BatchedOffloadEngine(model, params, None, n_total,
+                                    max_batch=2, paged=False)
+        got_p = paged.generate([prompt], max_new=max_new,
+                               cache_len=cache_len)
+        got_r = rows.generate([prompt], max_new=max_new,
+                              cache_len=cache_len)
+        assert got_p == got_r, (prompt, max_new, cache_len)
+        if paged.pool is not None:
+            paged.pool.check_leaks(expected_in_use=0)
+
+
+# ---------------------------------------------------------------------------
+# property test: interleaved admit/match/COW/insert/retire/evict never
+# double-frees or leaks (pure pool+index level, no model)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    OPS = st.sampled_from(
+        ["admit", "grow", "cow", "insert", "release", "evict"])
+    ACTIONS = st.lists(st.tuples(st.integers(0, 3), OPS),
+                       min_size=1, max_size=60)
+
+    def hyp_property(f):
+        return settings(max_examples=200, deadline=None)(given(
+            actions=ACTIONS, num_blocks=st.integers(4, 24),
+            prompt_seed=st.integers(0, 3))(f))
+else:
+    def hyp_property(f):                         # hypothesis optional locally
+        return pytest.mark.skip(reason="hypothesis not installed")(f)
+
+
+@hyp_property
+def test_prefix_pool_never_double_frees_or_leaks(actions, num_blocks,
+                                                 prompt_seed):
+    bs = 2
+    pool = KVBlockPool(num_blocks, bs)
+    pc = PrefixCache(pool)
+    # 4 slots; slots share a prompt prefix pairwise so matches really occur
+    prompts = [[(prompt_seed + s % 2) * 10 + i for i in range(8)]
+               for s in range(4)]
+    tables = {}
+    pos = {}
+    for slot, op in actions:
+        if op == "admit" and slot not in tables:
+            limit = len(prompts[slot]) - 1
+            m = pc.match(prompts[slot], limit)
+            need = (blocks_for(len(prompts[slot]), bs) - len(m.bids)
+                    + (1 if m.tokens % bs else 0))
+            if pool.try_reserve(max(0, need)):
+                t = BlockTable(pool, max(0, need))
+                t.adopt(m.bids)
+                tables[slot] = t
+                pos[slot] = m.tokens
+        elif op == "grow" and slot in tables:
+            t, p = tables[slot], pos[slot]
+            if p < len(prompts[slot]):
+                idx = p // bs
+                if (idx < len(t.ids) and t.is_shared(idx)
+                        and t.reserved + pool.available > 0):
+                    t.make_private(idx)          # device copy not modeled
+                need = idx + 1 - len(t.ids)
+                if need <= t.reserved + pool.available:
+                    t.ensure(p)
+                    pos[slot] = p + 1
+        elif op == "cow" and slot in tables:
+            # privatise MORE than the scheduler ever would (it only COWs
+            # the block a write targets) — the refcount ledger must hold
+            for idx in range(len(tables[slot].ids)):
+                if tables[slot].reserved + pool.available > 0:
+                    tables[slot].make_private(idx)
+        elif op == "insert" and slot in tables:
+            n = min(pos[slot], len(prompts[slot])) // bs
+            # only fully-written private prompt blocks are publishable
+            n = min(n, len(tables[slot].ids))
+            if n > 0:
+                pc.insert(prompts[slot], n, tables[slot].ids, {})
+        elif op == "release" and slot in tables:
+            tables[slot].release()
+            del tables[slot], pos[slot]
+        elif op == "evict":
+            pc.evict(2)
+        pool.check_leaks()                       # invariants after EVERY op
+        held = sum(len(t.ids) for t in tables.values())
+        # cached-only blocks + held blocks cover everything allocated, with
+        # shared blocks counted once
+        assert pool.blocks_in_use <= held + pc.cached_blocks
+    for t in tables.values():
+        t.release()
+    pc.evict(pc.cached_blocks)
+    pool.check_leaks(expected_in_use=0)
+    assert pool.reserved == 0
