@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Hashable, Iterable
+from typing import Hashable, Iterable, Optional
 
 
 @dataclass
@@ -17,6 +17,7 @@ class CacheStats:
     misses: int = 0
     prefetches: int = 0        # prefetches that actually inserted an entry
     prefetch_hits: int = 0     # accesses served by a prefetched entry
+    deep_prefetch_hits: int = 0  # ... by an entry prefetched >1 layer ahead
     redundant_prefetches: int = 0  # prefetches of an already-resident key
     evictions: int = 0
     demand_fetches: int = 0
@@ -37,9 +38,16 @@ class ExpertCache:
         assert policy in ("lru", "lfu")
         self.capacity = capacity
         self.policy = policy
+        # on_evict releases the device slot; with a tiered store behind the
+        # slot buffer, the release *demotes* the expert into the store's
+        # host-side cache — eviction is a move down the hierarchy, not a
+        # drop (serving/expertstore.py)
         self.on_evict = on_evict      # callback(key) -> None (slot release)
         self.on_insert = on_insert    # callback(key) -> None (slot fill)
-        self._entries: OrderedDict[Hashable, bool] = OrderedDict()
+        # key -> provenance: None for a demand fetch, else the prefetch
+        # lookahead distance in MoE layers (0 = next layer; >0 = the
+        # horizon-aware deep prefetch of a slow-tier expert)
+        self._entries: OrderedDict[Hashable, Optional[int]] = OrderedDict()
         self._freq: dict[Hashable, int] = {}
         self._pins: dict[Hashable, int] = {}   # key -> refcount
         self.stats = CacheStats()
@@ -89,15 +97,19 @@ class ExpertCache:
             self.on_evict(victim)
         self.stats.evictions += 1
 
-    def _insert(self, key, prefetched: bool) -> None:
+    def _insert(self, key, provenance: Optional[int]) -> None:
         assert key not in self._entries
         while len(self._entries) >= self.capacity:
             self._evict_one()
-        self._entries[key] = prefetched
+        self._entries[key] = provenance
         if self.on_insert is not None:
             self.on_insert(key)
 
-    def prefetch(self, keys: Iterable[Hashable]) -> None:
+    def prefetch(self, keys: Iterable[Hashable], horizon: int = 0) -> None:
+        """Insert predicted keys ahead of use. ``horizon`` is how many MoE
+        layers early the prediction was made (0 = next layer); it is
+        recorded as provenance so hit stats can attribute wins to the
+        horizon-aware deep prefetch of slow-tier experts."""
         for key in keys:
             if key in self._entries:
                 # re-prefetch of a resident key is a no-op hit: no insert,
@@ -110,18 +122,20 @@ class ExpertCache:
                 self._entries.move_to_end(key)
                 continue
             self.stats.prefetches += 1
-            self._insert(key, prefetched=True)
+            self._insert(key, provenance=horizon)
 
     def access(self, key) -> bool:
         """A compute-time expert use. Miss => demand fetch (inserted)."""
         self._freq[key] = self._freq.get(key, 0) + 1
         if key in self._entries:
             self.stats.hits += 1
-            if self._entries[key]:
+            if self._entries[key] is not None:
                 self.stats.prefetch_hits += 1
+                if self._entries[key] > 0:
+                    self.stats.deep_prefetch_hits += 1
             self._entries.move_to_end(key)
             return True
         self.stats.misses += 1
         self.stats.demand_fetches += 1
-        self._insert(key, prefetched=False)
+        self._insert(key, provenance=None)
         return False

@@ -298,31 +298,48 @@ class OnlineMoEBeyondPolicy(Policy):
         ``n_i - 1`` of each row attend to exactly that request's observed
         embeddings, so per-request results match the scalar ``predict``.
         """
+        return OnlineMoEBeyondPolicy.predict_many_layers(
+            policies, [layer])[layer]
+
+    @staticmethod
+    def predict_many_layers(policies: Sequence["OnlineMoEBeyondPolicy"],
+                            layers: Sequence[int],
+                            ) -> Dict[int, List[np.ndarray]]:
+        """``predict_many`` across a lookahead window of MoE layers: one
+        jitted forward serves every (request, future-layer) pair — the
+        layer id is a per-row input, so deeper-horizon predictions ride
+        the same batch as next-layer ones instead of multiplying predictor
+        calls. Returns {layer: per-request prediction arrays}; per-request
+        results match the scalar ``predict(t, layer)`` for each layer."""
         import jax.numpy as jnp
 
         from repro.core.metrics import select_experts
         pc = policies[0].pcfg
         ns = [min(len(p._emb), pc.max_seq) for p in policies]
-        out: List[np.ndarray] = [np.empty((0,), np.int64)] * len(policies)
+        out: Dict[int, List[np.ndarray]] = {
+            layer: [np.empty((0,), np.int64)] * len(policies)
+            for layer in layers}
         live = [i for i, n in enumerate(ns) if n > 0]
-        if not live:
+        if not live or not layers:
             return out
         tb = 1
         while tb < max(ns[i] for i in live):         # pow-of-two seq bucket
             tb *= 2
-        emb = np.zeros((len(live), tb, pc.token_emb_dim), np.float32)
-        mask = np.zeros((len(live), tb), bool)
-        for j, i in enumerate(live):
+        rows = [(i, layer) for layer in layers for i in live]
+        emb = np.zeros((len(rows), tb, pc.token_emb_dim), np.float32)
+        mask = np.zeros((len(rows), tb), bool)
+        lids = np.zeros((len(rows), tb), np.int32)
+        for j, (i, layer) in enumerate(rows):
             emb[j, : ns[i]] = np.stack(policies[i]._emb[-ns[i]:])
             mask[j, : ns[i]] = True
+            lids[j] = layer
         logits = np.asarray(policies[0]._apply(
-            policies[0].params, jnp.asarray(emb),
-            jnp.full((len(live), tb), layer, jnp.int32),
+            policies[0].params, jnp.asarray(emb), jnp.asarray(lids),
             jnp.asarray(mask)))
-        for j, i in enumerate(live):
+        for j, (i, layer) in enumerate(rows):
             lg = logits[j, ns[i] - 1, : pc.num_experts]
             sel = select_experts(lg, policies[i].width, threshold=-1e9)
-            out[i] = np.nonzero(sel)[0]
+            out[layer][i] = np.nonzero(sel)[0]
         return out
 
 
@@ -389,6 +406,21 @@ class PerRequestPolicy:
             # one jitted predictor forward across in-flight requests
             return OnlineMoEBeyondPolicy.predict_many(pols, layer)
         return [p.predict(t, layer) for p, t in zip(pols, ts)]
+
+    def predict_batch_multi(self, rids: Sequence[int], ts: Sequence[int],
+                            layers: Sequence[int],
+                            ) -> Dict[int, List[np.ndarray]]:
+        """Per-request prefetch sets for a *lookahead window* of MoE
+        layers — the horizon-aware engine asks for layers ``mi .. mi+H-1``
+        at once and gates each predicted key on its tier's required
+        lookahead depth. Online-predictor policies fuse the whole window
+        into one forward; everything else loops ``predict_batch``."""
+        pols = [self._get(r) for r in rids]
+        if (self._shared is None and len(layers) > 0
+                and OnlineMoEBeyondPolicy.batchable(pols)):
+            return OnlineMoEBeyondPolicy.predict_many_layers(pols, layers)
+        return {layer: self.predict_batch(rids, ts, layer)
+                for layer in layers}
 
     def observe_batch(self, rids: Sequence[int], ts: Sequence[int],
                       layer: int, experts_per_req, embeddings=None) -> None:

@@ -1,5 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if __name__ == "__main__":
+    # must land before jax initialises; only when run as the dry-run tool —
+    # library importers (engines pulling the per-layer roofline estimates)
+    # must NOT have their process forced to 512 host devices
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 # Multi-pod dry-run: lower + compile every (arch x input-shape) step on the
 # production mesh, print memory_analysis/cost_analysis, and extract roofline
@@ -43,6 +47,92 @@ SKIPS = {
 def _abstract(tree):
     return jax.tree.map(
         lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _attn_layer_params(cfg, kind: str) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    if kind == "mla":
+        m = cfg.mla
+        qk = m.nope_head_dim + m.rope_head_dim
+        return (d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk
+                + d * (m.kv_lora_rank + m.rope_head_dim)
+                + m.kv_lora_rank * cfg.num_heads * (m.nope_head_dim
+                                                    + m.v_head_dim)
+                + cfg.num_heads * m.v_head_dim * d)
+    if kind == "ssd":
+        s = cfg.ssm
+        di = s.expand * d
+        return d * (2 * di + 2 * s.d_state + di // s.headdim) + di * d
+    if kind == "rglru":
+        w = cfg.rglru.lru_width or d
+        return 2 * d * w + 3 * w + w * d
+    return (d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd
+            + cfg.num_heads * hd * d)
+
+
+def _kv_read_positions(cfg, kind: str, cache_len: int) -> int:
+    if kind == "local":
+        return min(cache_len, cfg.window)
+    if kind == "chunked":
+        return min(cache_len, cfg.chunk)
+    if kind in ("rglru", "ssd"):
+        return 0                     # bounded recurrent state, not a KV scan
+    return cache_len
+
+
+def decode_layer_roofline(cfg, batch: int = 1, cache_len: int = 1024,
+                          peak_flops: float = PEAK_FLOPS_BF16,
+                          hbm_bw: float = HBM_BW):
+    """Per-layer ``(attn_s, ffn_s)`` roofline estimates for ONE decode step.
+
+    The analytic twin of the compiled dry-run's cost extraction, resolved
+    per layer: each half's time is ``max(flops/peak, bytes/bw)`` with
+    matvec flops over the half's parameters plus the attention KV scan, and
+    bytes covering the weights plus the KV read. The serving engines use
+    this to *derive* ``layer_compute_s`` instead of taking it as a knob —
+    the OverlapTracker's compute clock then reflects the architecture, so
+    modeled stall/overlap reports are calibrated per arch (ROADMAP
+    "Measured overlap"). A measured-walltime override rescales these
+    per-layer terms to a step's real wall clock (``DecodeCore`` with
+    ``layer_compute_s="measured"``).
+    """
+    dt = jnp.dtype(cfg.dtype).itemsize
+    d = cfg.d_model
+    kinds = cfg.layer_kinds()
+    out = []
+    for li, kind in enumerate(kinds):
+        ap = _attn_layer_params(cfg, kind)
+        kv_pos = _kv_read_positions(cfg, kind, cache_len)
+        if kind == "mla":
+            m = cfg.mla
+            qk_dim = cfg.num_heads * (m.nope_head_dim + m.rope_head_dim)
+            kv_bytes = kv_pos * (m.kv_lora_rank + m.rope_head_dim) * dt
+        else:
+            qk_dim = cfg.num_heads * cfg.hd
+            kv_bytes = kv_pos * 2 * cfg.num_kv_heads * cfg.hd * dt
+        attn_flops = batch * (2 * ap + 4 * kv_pos * qk_dim)
+        attn_bytes = ap * dt + batch * kv_bytes
+        attn_s = max(attn_flops / peak_flops, attn_bytes / hbm_bw)
+
+        ffn_s = 0.0
+        if kind != "ssd":
+            m = cfg.moe
+            if m is not None and li >= m.first_dense_layers:
+                per = 3 * d * m.d_ff_expert
+                active = (m.top_k + m.num_shared) * per + d * m.num_experts
+                ffn_flops = 2 * active * batch
+                # distinct routed experts' weights stream once per step
+                ffn_bytes = (min(batch * m.top_k, m.num_experts) + m.num_shared
+                             ) * per * dt + d * m.num_experts * dt
+            else:
+                dff = cfg.d_ff
+                if m is not None and m.d_ff_dense:
+                    dff = m.d_ff_dense
+                ffn_flops = 2 * 3 * d * dff * batch
+                ffn_bytes = 3 * d * dff * dt
+            ffn_s = max(ffn_flops / peak_flops, ffn_bytes / hbm_bw)
+        out.append((attn_s, ffn_s))
+    return out
 
 
 def build_step(arch: str, shape_name: str, mesh, cfg_transform=None,

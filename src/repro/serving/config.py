@@ -7,7 +7,9 @@ kernel — which *read path* every paged attention layer compiles to.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
+
+from repro.serving.expertstore import TierConfig
 
 
 @dataclass(frozen=True)
@@ -32,6 +34,18 @@ class ServeConfig:
     zero-extra-ref prefixes are evicted when admission needs their blocks
     either way). Needs the chunk-prefill-capable paged engine; stacks with
     ring/recurrent layers silently keep the cache off.
+
+    tiers (a :class:`~repro.serving.expertstore.TierConfig`) swaps the
+    single-host expert store for the tiered device/host/peer/disk
+    hierarchy: consistent-hash expert->shard placement, per-tier
+    bandwidth/latency fetch channels, and horizon-aware prefetch whose
+    lookahead depth scales with the tier a predicted expert resides in.
+    ``None`` keeps one host's DRAM holding every expert.
+
+    layer_compute_s drives the OverlapTracker's modeled compute clock: a
+    float is the legacy uniform knob; ``"roofline"`` derives per-layer
+    times from the dry-run's analytic roofline; ``"measured"`` rescales
+    the roofline shape by measured step walltimes.
     """
     max_batch: int = 4
     paged: bool = True
@@ -42,6 +56,8 @@ class ServeConfig:
     kernel_backend: Optional[str] = None
     prefix_cache: bool = False
     prefix_cache_blocks: Optional[int] = None
+    tiers: Optional[TierConfig] = None
+    layer_compute_s: Union[float, str] = 0.0
 
     def resolve_kernel(self) -> Optional[str]:
         """The backend string the engine threads into jitted attention

@@ -31,9 +31,10 @@ parity reference.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +47,8 @@ from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import transformer as T
 from repro.models.common import ffn_apply, rms_norm
-from repro.serving.offload import (HostExpertStore, OverlapTracker,
-                                   make_offload_cache)
+from repro.serving.offload import (TIER_HOST, HostExpertStore,
+                                   OverlapTracker, make_offload_cache)
 
 
 def unstack_layers(cfg, params) -> List[dict]:
@@ -105,6 +106,16 @@ class EngineStats:
     # whole pool (they retire immediately with an empty result instead of
     # aborting the run)
     rejected_requests: int = 0
+    # --- tier breakdowns (tiered expert store; single-host engines report
+    # everything under tier 1). Keys are storage tiers: 1 = local host
+    # DRAM, 2 = peer-host shard over the interconnect, 3 = disk/mmap.
+    stall_by_tier: Dict[int, float] = field(default_factory=dict)
+    overlapped_by_tier: Dict[int, float] = field(default_factory=dict)
+    fetches_by_tier: Dict[int, int] = field(default_factory=dict)
+    fetch_bytes_by_tier: Dict[int, int] = field(default_factory=dict)
+    # expert uses served by an entry prefetched >1 MoE layer ahead (the
+    # horizon-aware deep prefetch of slow-tier experts)
+    deep_prefetch_hits: int = 0
 
     @property
     def hit_rate(self):
@@ -128,9 +139,10 @@ class DecodeCore:
 
     def __init__(self, model, params, capacity: int, eviction: str = "lru",
                  host_bw: float = 100e9, expert_backend: str = "jnp",
-                 max_batch: int = 1, layer_compute_s: float = 0.0,
+                 max_batch: int = 1,
+                 layer_compute_s: Union[float, str] = 0.0,
                  max_prefill_chunk: int = 8,
-                 kernel: Optional[str] = "auto"):
+                 kernel: Optional[str] = "auto", tiers=None):
         cfg = model.cfg
         assert cfg.moe is not None, "offload engine needs an MoE backbone"
         self.cfg = cfg
@@ -143,7 +155,6 @@ class DecodeCore:
         self.expert_backend = expert_backend
         self.max_batch = max_batch
         self.scratch_row = max_batch
-        self.layer_compute_s = layer_compute_s
         self.max_prefill_chunk = max_prefill_chunk
         # paged attention read path: a kernel backend string threaded into
         # the jitted paged programs, None for the gather parity route, or
@@ -153,15 +164,67 @@ class DecodeCore:
         self.kernel = default_kernel_backend() if kernel == "auto" else kernel
 
         # host store gets the routed-expert weights; everything else stays
-        # in self.layers (device)
+        # in self.layers (device). ``tiers`` (a TierConfig) swaps the
+        # single-host store for the device/host/peer/disk hierarchy.
         store_layers = [self.layers[li]["moe"] for li in self.moe_layers]
-        self.store = HostExpertStore(store_layers)
+        if tiers is not None:
+            from repro.serving.expertstore import TieredExpertStore
+            self.store = TieredExpertStore(store_layers, tiers)
+        else:
+            self.store = HostExpertStore(store_layers)
+        # how many MoE layers ahead predictions are asked for: the store's
+        # deepest tier decides (single host -> 1, the original behaviour)
+        self.max_horizon = self.store.max_horizon
         self.tracker = OverlapTracker(host_bw)
         self.cache, self.slots = make_offload_cache(
             self.store, capacity, eviction, host_bw, tracker=self.tracker)
         self.stats = EngineStats()
+        self._init_layer_compute(layer_compute_s)
         self._tok_emb_np = np.asarray(params["tok_emb"], np.float32)
         self._build_fns()
+
+    # ------------------------------------------------------------------
+    def _init_layer_compute(self, layer_compute_s: Union[float, str]):
+        """The OverlapTracker's compute clock per layer half.
+
+        Every layer advances its attention half after the attention
+        program and its FFN half after the dense/expert FFN. A float is
+        the legacy uniform knob. ``"roofline"`` derives
+        per-layer ``(attn_s, ffn_s)`` from the dry-run's analytic roofline
+        (launch/dryrun.decode_layer_roofline) so stall/overlap reports are
+        calibrated to the architecture instead of a guess. ``"measured"``
+        starts from the roofline shape and rescales it by an EWMA of each
+        decode step's real wall clock over its modeled total, so the
+        modeled clock tracks this machine's actual speed."""
+        self.layer_compute_s = layer_compute_s
+        self._calib = 1.0
+        self._measure = False
+        if isinstance(layer_compute_s, str):
+            if layer_compute_s not in ("roofline", "measured"):
+                raise ValueError(
+                    f"layer_compute_s must be a float, 'roofline' or "
+                    f"'measured', got {layer_compute_s!r}")
+            from repro.launch.dryrun import decode_layer_roofline
+            self._layer_s = decode_layer_roofline(self.cfg,
+                                                  batch=self.max_batch)
+            self._measure = layer_compute_s == "measured"
+        else:
+            self._layer_s = [(layer_compute_s, layer_compute_s)
+                             ] * self.cfg.num_layers
+        self._step_advanced = 0.0
+
+    def _advance(self, li: int, half: int) -> None:
+        dt = self._layer_s[li][half] * self._calib
+        self.tracker.advance(dt)
+        self._step_advanced += dt
+
+    def _calibrate(self, wall_s: float) -> None:
+        """Measured-walltime override: rescale the roofline terms so one
+        step's modeled compute tracks the real wall clock (EWMA)."""
+        if not self._measure or self._step_advanced <= 0:
+            return
+        target = self._calib * wall_s / self._step_advanced
+        self._calib = 0.7 * self._calib + 0.3 * target
 
     # ------------------------------------------------------------------
     def _build_fns(self):
@@ -321,18 +384,43 @@ class DecodeCore:
                 total += sum(v.nbytes // v.shape[0] for v in c.values())
         return total
 
-    def _next_moe(self, li: int) -> Optional[int]:
-        """MoE index of the first MoE layer at or after layer li."""
+    def _moe_window(self, li: int) -> List[int]:
+        """MoE ordinals of the next ``max_horizon`` MoE layers at/after
+        layer ``li`` — the lookahead window horizon-aware prefetch fills."""
+        out = []
         for lj in self.moe_layers:
             if lj >= li:
-                return self.moe_index[lj]
-        return None
+                out.append(self.moe_index[lj])
+                if len(out) == self.max_horizon:
+                    break
+        return out
 
-    def _submit_prefetch(self, policy, rids, ts, mi: Optional[int]):
-        if policy is None or mi is None:
+    def _submit_prefetch(self, policy, rids, ts, li_from: int):
+        """Submit predicted experts for the lookahead window starting at
+        layer ``li_from``. Distance-0 predictions (the next MoE layer) are
+        always prefetched — the original single-layer double-buffer. At
+        distance d > 0 a predicted key is prefetched only when the tier it
+        currently resides in needs that much lead time
+        (``store.prefetch_horizon(key) > d``): a tier-3 expert is
+        requested layers earlier than a tier-1 one, whose prediction can
+        wait for the more accurate next-layer pass."""
+        if policy is None:
             return
-        for pred in policy.predict_batch(rids, ts, mi):
-            self.cache.prefetch((mi, int(e)) for e in pred)
+        mis = self._moe_window(li_from)
+        if not mis:
+            return
+        if len(mis) == 1:
+            preds = {mis[0]: policy.predict_batch(rids, ts, mis[0])}
+        else:
+            preds = policy.predict_batch_multi(rids, ts, mis)
+        for d, mi in enumerate(mis):
+            for pred in preds[mi]:
+                keys = [(mi, int(e)) for e in pred]
+                if d > 0:
+                    keys = [k for k in keys
+                            if self.store.prefetch_horizon(k) > d]
+                if keys:
+                    self.cache.prefetch(keys, horizon=d)
 
     # ------------------------------------------------------------------
     def _moe_units(self, mi: int, lp, h, w, x, idx_np: np.ndarray,
@@ -367,7 +455,7 @@ class DecodeCore:
                          lp["moe"].get("shared"), x)
         for key in pinned:
             self.cache.unpin(key)
-        self.tracker.advance(self.layer_compute_s)
+        self._advance(self.moe_layers[mi], 1)     # the expert-FFN half
         return x, gts
 
     def _sync_stats(self):
@@ -375,6 +463,17 @@ class DecodeCore:
         self.stats.sim_stall_s = self.tracker.stall_s
         self.stats.blocking_stall_s = self.slots.sim_fetch_s
         self.stats.overlapped_s = self.tracker.overlapped_s
+        self.stats.stall_by_tier = dict(self.tracker.stall_by_tier)
+        self.stats.overlapped_by_tier = dict(self.tracker.overlapped_by_tier)
+        self.stats.deep_prefetch_hits = self.cache.stats.deep_prefetch_hits
+        st = getattr(self.store, "stats", None)
+        if st is not None:
+            self.stats.fetches_by_tier = dict(st.fetches_by_tier)
+            self.stats.fetch_bytes_by_tier = dict(st.bytes_by_tier)
+        elif self.slots.fetch_count:
+            self.stats.fetches_by_tier = {TIER_HOST: self.slots.fetch_count}
+            self.stats.fetch_bytes_by_tier = {TIER_HOST:
+                                              self.slots.fetch_bytes}
 
     def step(self, caches, rows: Sequence[int], pos: Sequence[int],
              tokens: Sequence[int], policy: Optional[PerRequestPolicy],
@@ -405,11 +504,14 @@ class DecodeCore:
             tab_p[:n] = tables
             tab_p = jnp.asarray(tab_p)
 
+        t_wall = time.perf_counter()
+        self._step_advanced = 0.0
         x = self._embed(self.params["tok_emb"], toks_p)
         experts_out = [[] for _ in range(n)]
-        # double-buffer: predictions for the first MoE layer go onto the
-        # channel now, hiding behind the dense/attention layers below it
-        self._submit_prefetch(policy, rids, ts, self._next_moe(0))
+        # double-buffer: predictions for the lookahead window starting at
+        # the first MoE layer go onto the channels now, hiding behind the
+        # dense/attention layers below it
+        self._submit_prefetch(policy, rids, ts, 0)
         for li in range(cfg.num_layers):
             lp = self.layers[li]
             kind = self.kinds[li]
@@ -420,7 +522,7 @@ class DecodeCore:
             else:
                 x, caches[li] = self._attn(lp, x, caches[li], rows_p, pos_p,
                                            kind=kind)
-            self.tracker.advance(self.layer_compute_s)
+            self._advance(li, 0)
             if li in self.moe_index:
                 mi = self.moe_index[li]
                 h, w, idx = self._router(lp, x)
@@ -431,14 +533,15 @@ class DecodeCore:
                     policy.observe_batch(rids, ts, mi, gts, embeddings)
                 for i in range(n):
                     experts_out[i].append(gts[i])
-                # double-buffer the NEXT MoE layer's predicted experts
-                self._submit_prefetch(policy, rids, ts,
-                                      self._next_moe(li + 1))
+                # double-buffer the NEXT MoE layers' predicted experts
+                self._submit_prefetch(policy, rids, ts, li + 1)
             elif "ffn" in lp:
                 x = self._dense_ffn(lp, x)
+                self._advance(li, 1)
         logits = np.asarray(self._unembed(self.params, x))[:n, 0]
         self.stats.tokens += n
         self.stats.steps += 1
+        self._calibrate(time.perf_counter() - t_wall)
         self._sync_stats()
         return logits, caches, experts_out
 
@@ -471,15 +574,17 @@ class DecodeCore:
         tab = jnp.asarray(table, jnp.int32)
         embeddings = self._tok_emb_np[np.asarray(tokens, np.int64)]
 
+        t_wall = time.perf_counter()
+        self._step_advanced = 0.0
         x = self._embed_seq(self.params["tok_emb"], toks_p)      # (1,cb,D)
         experts_out: List[List[np.ndarray]] = []
-        self._submit_prefetch(policy, [rid], [t0], self._next_moe(0))
+        self._submit_prefetch(policy, [rid], [t0], 0)
         for li in range(cfg.num_layers):
             lp = self.layers[li]
             x, caches[li] = self._paged_prefill(lp, x, caches[li], tab, t0,
                                                 n, kind=self.kinds[li],
                                                 kernel=self.kernel)
-            self.tracker.advance(self.layer_compute_s)
+            self._advance(li, 0)
             if li in self.moe_index:
                 mi = self.moe_index[li]
                 h, w, idx = self._router(lp, x)                 # (1,cb,...)
@@ -494,14 +599,15 @@ class DecodeCore:
                 experts_out.append(gts)
                 if policy is not None:
                     policy.observe_batch([rid] * n, ts, mi, gts, embeddings)
-                self._submit_prefetch(policy, [rid], [t0 + n - 1],
-                                      self._next_moe(li + 1))
+                self._submit_prefetch(policy, [rid], [t0 + n - 1], li + 1)
             elif "ffn" in lp:
                 x = self._dense_ffn(lp, x)
+                self._advance(li, 1)
         logits = np.asarray(self._unembed(self.params, x))[0, :n]
         self.stats.tokens += n
         self.stats.prefill_tokens += n
         self.stats.prefill_chunks += 1
+        self._calibrate(time.perf_counter() - t_wall)
         self._sync_stats()
         return logits, caches, experts_out
 
@@ -512,10 +618,10 @@ class OffloadEngine:
     def __init__(self, model, params, policy: Optional[Policy],
                  capacity: int, eviction: str = "lru",
                  host_bw: float = 100e9, expert_backend: str = "jnp",
-                 layer_compute_s: float = 0.0):
+                 layer_compute_s: Union[float, str] = 0.0, tiers=None):
         self.core = DecodeCore(model, params, capacity, eviction, host_bw,
                                expert_backend, max_batch=1,
-                               layer_compute_s=layer_compute_s)
+                               layer_compute_s=layer_compute_s, tiers=tiers)
         self.cfg = self.core.cfg
         self.model = model
         self.params = params

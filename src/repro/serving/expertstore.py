@@ -1,0 +1,494 @@
+"""Tiered sharded expert store: device/host/peer/disk parameter hierarchy.
+
+The paper's premise is that the expert set does not fit where compute
+happens; ``HostExpertStore`` assumed the opposite one level up — every
+expert in one host's DRAM. This module generalises it into an explicit
+tier hierarchy, simulated multi-host in one process:
+
+  tier 0  device slot buffer          (serving/offload.SlotBuffer + the
+                                       ExpertCache control plane)
+  tier 1  local host DRAM             (this shard's home experts + an LRU
+                                       cache of promoted copies)
+  tier 2  peer-host DRAM shards       (modeled interconnect: latency + bw)
+  tier 3  disk / mmap spill           (a real ``np.memmap`` round-trip for
+                                       experts past a shard's DRAM budget)
+
+**Placement** is consistent-hash: every ``(moe_layer, expert)`` key hashes
+onto a ring of shard virtual nodes, so its *authoritative home* is stable
+under shard add/remove (only keys adjacent to the changed shard move). A
+shard's home experts live in its DRAM up to ``shard_dram_experts``; the
+overflow spills to a memory-mapped file — fetched through real file I/O so
+the tier-3 path is exercised, not just modeled.
+
+**Residency** is a ledger: an expert is findable in exactly one
+authoritative home plus any number of cached tiers; promotion on access
+inserts a tier-1 cached copy (LRU, ``cache_experts`` capacity), demotion
+from tier 0 (slot-buffer eviction) refreshes that copy instead of dropping
+the bytes, and pinned entries are unevictable at every tier. The ledger
+asserts the invariants — tests interleave fetch/promote/demote/evict/pin
+and check nothing is ever lost, double-resident in one tier, or evicted
+while pinned.
+
+**Fetch accounting** reuses the OverlapTracker model (serving/offload.py):
+each tier is one serial async channel, a fetch's modeled duration is
+``latency + nbytes/bandwidth`` of its source tier, and stall reports break
+down by tier.
+
+**Horizon-aware prefetch**: the store tells the engine how many MoE layers
+ahead a key must be requested (``prefetch_horizon``) based on the tier it
+currently resides in — a tier-3 expert is requested layers earlier than a
+tier-1 one, because slower tiers just need a longer prediction horizon to
+hide behind compute.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import os
+import tempfile
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.serving.offload import (TIER_DISK, TIER_HOST, TIER_PEER,
+                                   FetchInfo, HostExpertStore, Key)
+
+
+@dataclass(frozen=True)
+class TierConfig:
+    """Shard/tier knobs for :class:`TieredExpertStore`.
+
+    ``num_shards`` hosts share the expert set (shard ``local_shard`` is the
+    serving process). ``shard_dram_experts`` caps how many home experts a
+    shard keeps in DRAM — the rest spill to disk (tier 3). ``cache_experts``
+    sizes the local tier-1 LRU cache of promoted peer/disk experts.
+    ``horizons[t]`` is how many MoE layers ahead a tier-``t`` expert is
+    prefetched; the default scales lookahead with tier depth, ``(1, 1, 1,
+    1)`` is the fixed-horizon baseline the benchmark compares against.
+    """
+    num_shards: int = 1
+    local_shard: int = 0
+    shard_dram_experts: Optional[int] = None   # None -> no disk spill
+    cache_experts: int = 0                     # tier-1 cache slots
+    host_bw: float = 100e9                     # tier-1 B/s (host -> device)
+    peer_bw: float = 25e9                      # tier-2 B/s (interconnect)
+    peer_latency_s: float = 20e-6
+    disk_bw: float = 3e9                       # tier-3 B/s (SSD read)
+    disk_latency_s: float = 100e-6
+    vnodes: int = 64                           # ring virtual nodes per shard
+    seed: int = 0
+    horizons: Tuple[int, int, int, int] = (1, 1, 2, 3)
+
+    def tier_duration(self, tier: int, nbytes: int) -> Optional[float]:
+        """Modeled transfer time for an ``nbytes`` fetch from ``tier`` into
+        a device slot (None for tier 1: the SlotBuffer's own host-bandwidth
+        model keeps the single-host numbers bit-identical)."""
+        if tier == TIER_HOST:
+            return None
+        if tier == TIER_PEER:
+            return self.peer_latency_s + nbytes / self.peer_bw
+        return self.disk_latency_s + nbytes / self.disk_bw
+
+
+def _hash64(*parts) -> int:
+    """Deterministic 64-bit hash (process-hash randomisation immune)."""
+    h = hashlib.blake2b(repr(parts).encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+class ConsistentHashRing:
+    """Consistent-hash placement of keys onto shards.
+
+    Each shard contributes ``vnodes`` points on a 64-bit ring; a key is
+    homed on the shard owning the first point clockwise of the key's hash.
+    Adding or removing a shard only re-homes the keys whose clockwise walk
+    now lands on (or used to land on) that shard's points — placement of
+    everything else is stable, which is what makes re-sharding a live
+    store feasible.
+    """
+
+    def __init__(self, shards: Sequence[int], vnodes: int = 64,
+                 seed: int = 0):
+        self.vnodes = vnodes
+        self.seed = seed
+        self._shards: Set[int] = set()
+        self._points: List[Tuple[int, int]] = []   # (hash, shard) sorted
+        for s in shards:
+            self.add_shard(s)
+
+    @property
+    def shards(self) -> Set[int]:
+        return set(self._shards)
+
+    def _shard_points(self, shard: int) -> List[Tuple[int, int]]:
+        return [(_hash64("vnode", self.seed, shard, v), shard)
+                for v in range(self.vnodes)]
+
+    def add_shard(self, shard: int) -> None:
+        assert shard not in self._shards, f"shard {shard} already on ring"
+        self._shards.add(shard)
+        for p in self._shard_points(shard):
+            bisect.insort(self._points, p)
+
+    def remove_shard(self, shard: int) -> None:
+        assert shard in self._shards, f"shard {shard} not on ring"
+        self._shards.discard(shard)
+        self._points = [p for p in self._points if p[1] != shard]
+
+    def lookup(self, key) -> int:
+        assert self._points, "empty ring"
+        h = _hash64("key", self.seed, key)
+        i = bisect.bisect_right(self._points, (h, 2**64))
+        return self._points[i % len(self._points)][1]
+
+
+@dataclass
+class StoreStats:
+    """Per-tier fetch traffic + residency churn."""
+    fetches_by_tier: Dict[int, int] = field(default_factory=dict)
+    bytes_by_tier: Dict[int, int] = field(default_factory=dict)
+    promotions: int = 0        # tier-1 cached copies inserted on access
+    demotions: int = 0         # tier-0 evictions absorbed into tier 1
+    cache_evictions: int = 0   # tier-1 cached copies dropped (home remains)
+    spilled_experts: int = 0   # experts homed on disk at placement time
+
+    def count(self, tier: int, nbytes: int) -> None:
+        self.fetches_by_tier[tier] = self.fetches_by_tier.get(tier, 0) + 1
+        self.bytes_by_tier[tier] = self.bytes_by_tier.get(tier, 0) + nbytes
+
+
+class ResidencyLedger:
+    """Where every expert lives: one authoritative home + cached copies.
+
+    Invariants (asserted by mutators and :meth:`check`):
+
+    * every registered key has exactly ONE authoritative home, set once at
+      placement and never dropped — an expert can never be lost;
+    * a key is resident at most once per tier: the home tier holds the
+      authoritative copy, so a cached copy may not shadow it, and a tier
+      holds at most one cached copy;
+    * a pinned key's copies are unevictable at every tier
+      (:meth:`drop_copy` refuses while the pin refcount is nonzero).
+    """
+
+    def __init__(self):
+        self._home: Dict[Key, Tuple[int, int]] = {}   # key -> (shard, tier)
+        self._cached: Dict[Key, Set[int]] = {}        # key -> cached tiers
+        self._pins: Dict[Key, int] = {}
+
+    def place(self, key: Key, shard: int, tier: int) -> None:
+        assert key not in self._home, f"{key!r} already has a home"
+        self._home[key] = (shard, tier)
+
+    def home(self, key: Key) -> Tuple[int, int]:
+        return self._home[key]
+
+    def rehome(self, key: Key, shard: int, tier: int) -> None:
+        """Move the authoritative copy (re-sharding); cached copies at the
+        new home tier would now be double-resident, so they must be gone."""
+        assert key in self._home, f"{key!r} has no home to move"
+        assert tier not in self._cached.get(key, ()), (
+            f"rehome of {key!r} onto tier {tier} would double-res a cache")
+        self._home[key] = (shard, tier)
+
+    def cached_tiers(self, key: Key) -> Set[int]:
+        return set(self._cached.get(key, ()))
+
+    def add_copy(self, key: Key, tier: int) -> None:
+        assert key in self._home, f"copy of unplaced key {key!r}"
+        assert tier != self._home[key][1], (
+            f"{key!r}: cached copy would double-res home tier {tier}")
+        tiers = self._cached.setdefault(key, set())
+        assert tier not in tiers, f"{key!r} double-resident in tier {tier}"
+        tiers.add(tier)
+
+    def drop_copy(self, key: Key, tier: int) -> None:
+        assert not self.pinned(key), f"evicting pinned {key!r}"
+        tiers = self._cached.get(key, set())
+        assert tier in tiers, f"{key!r} has no copy in tier {tier}"
+        tiers.discard(tier)
+        if not tiers:
+            self._cached.pop(key, None)
+
+    def tier_of(self, key: Key) -> int:
+        """Fastest tier the key is findable in (home or cached copy)."""
+        return min(self._cached.get(key, set()) | {self._home[key][1]})
+
+    # -- pinning -----------------------------------------------------------
+    def pin(self, key: Key) -> None:
+        assert key in self._home, f"pin of unplaced key {key!r}"
+        self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key: Key) -> None:
+        n = self._pins.get(key, 0) - 1
+        if n <= 0:
+            self._pins.pop(key, None)
+        else:
+            self._pins[key] = n
+
+    def pinned(self, key: Key) -> bool:
+        return self._pins.get(key, 0) > 0
+
+    # -- invariants --------------------------------------------------------
+    def check(self, keys: Optional[Sequence[Key]] = None) -> None:
+        """Full-ledger invariant sweep (tests call this after every op)."""
+        for key in (keys if keys is not None else self._home):
+            assert key in self._home, f"{key!r} lost: no authoritative home"
+            home_tier = self._home[key][1]
+            cached = self._cached.get(key, set())
+            assert home_tier not in cached, (
+                f"{key!r} double-resident in home tier {home_tier}")
+            # set membership enforces one-copy-per-tier; tiers are sane
+            assert all(t in (TIER_HOST, TIER_PEER, TIER_DISK)
+                       for t in cached | {home_tier})
+        for key in self._cached:
+            assert key in self._home, f"cached copy of unplaced {key!r}"
+
+
+class TieredExpertStore:
+    """Device/host/peer/disk expert parameter hierarchy behind the
+    ``HostExpertStore`` interface (``fetch``/``get``/``tier_of``/
+    ``demote``/``prefetch_horizon``), so the engines' slot buffer and
+    ExpertCache run unchanged on top of it.
+
+    Multi-host is simulated in one process: ``num_shards`` shard views over
+    one parameter set, a consistent-hash ring assigning every key a home
+    shard, per-tier bandwidth/latency models for the fetch channels, and a
+    real ``np.memmap`` file for the disk tier. Weights returned are
+    bit-identical to ``HostExpertStore.get`` regardless of tier — streams
+    stay token-identical; only the modeled timeline changes.
+    """
+
+    def __init__(self, expert_params_per_layer, tc: TierConfig,
+                 spill_dir: Optional[str] = None):
+        assert tc.num_shards >= 1
+        assert 0 <= tc.local_shard < tc.num_shards
+        assert len(tc.horizons) == 4 and min(tc.horizons) >= 1
+        self.base = HostExpertStore(expert_params_per_layer)
+        self.tc = tc
+        self.num_layers = self.base.num_layers
+        self.num_experts = self.base.num_experts
+        self.bytes_per_expert = self.base.bytes_per_expert
+        self.max_horizon = max(tc.horizons)
+        self.ring = ConsistentHashRing(range(tc.num_shards), tc.vnodes,
+                                       tc.seed)
+        self.ledger = ResidencyLedger()
+        self.stats = StoreStats()
+        # tier-1 LRU cache of promoted peer/disk experts (weights tuples)
+        self._cache: "OrderedDict[Key, tuple]" = OrderedDict()
+        # weights currently up in a device slot (fetch .. demote bracket):
+        # demotion reuses these bytes instead of re-reading the spill file
+        self._on_device: Dict[Key, tuple] = {}
+        self._spill_dir = spill_dir
+        self._place_all(spill_dir)
+
+    # -- placement ---------------------------------------------------------
+    def _place_all(self, spill_dir: Optional[str]) -> None:
+        """Home every key on the ring; spill each shard's DRAM overflow to
+        the memmap file (real file I/O on tier-3 fetches)."""
+        by_shard: Dict[int, List[Key]] = {}
+        for layer in range(self.num_layers):
+            for e in range(self.num_experts):
+                key = (layer, e)
+                by_shard.setdefault(self.ring.lookup(key), []).append(key)
+        self.home_shard: Dict[Key, int] = {}
+        spilled: List[Key] = []
+        cap = self.tc.shard_dram_experts
+        for shard, keys in sorted(by_shard.items()):
+            for i, key in enumerate(keys):
+                self.home_shard[key] = shard
+                if cap is not None and i >= cap:
+                    spilled.append(key)
+        self._spill_row: Dict[Key, int] = {k: i
+                                           for i, k in enumerate(spilled)}
+        self._spill = self._build_spill(spilled, spill_dir)
+        for key, shard in self.home_shard.items():
+            if key in self._spill_row:
+                tier = TIER_DISK
+            elif shard == self.tc.local_shard:
+                tier = TIER_HOST
+            else:
+                tier = TIER_PEER
+            self.ledger.place(key, shard, tier)
+        self.stats.spilled_experts = len(spilled)
+
+    def _build_spill(self, spilled: Sequence[Key],
+                     spill_dir: Optional[str]):
+        if not spilled:
+            self._spill_path = None
+            return None
+        wg0, wu0, wd0 = self.base.get(spilled[0])
+        self._shapes = (wg0.shape, wu0.shape, wd0.shape)
+        sizes = [int(np.prod(s)) for s in self._shapes]
+        self._offsets = np.cumsum([0] + sizes)
+        fd, path = tempfile.mkstemp(suffix=".expertspill",
+                                    dir=spill_dir, prefix="tier3_")
+        os.close(fd)
+        self._spill_path = path
+        mm = np.memmap(path, dtype=wg0.dtype, mode="w+",
+                       shape=(len(spilled), int(self._offsets[-1])))
+        for i, key in enumerate(spilled):
+            for j, w in enumerate(self.base.get(key)):
+                mm[i, self._offsets[j]: self._offsets[j + 1]] = w.reshape(-1)
+        mm.flush()
+        return mm
+
+    def close(self) -> None:
+        """Release the spill memmap and unlink its file."""
+        if self._spill is not None:
+            self._spill = None
+            try:
+                os.unlink(self._spill_path)
+            except OSError:
+                pass
+            self._spill_path = None
+
+    def __del__(self):  # best-effort temp-file cleanup
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _read_spill(self, key: Key):
+        """Tier-3 read: pull the expert's rows out of the memmap (copies —
+        this is the actual disk -> DRAM transfer)."""
+        row = self._spill[self._spill_row[key]]
+        return tuple(
+            np.array(row[self._offsets[j]: self._offsets[j + 1]]
+                     ).reshape(self._shapes[j])
+            for j in range(3))
+
+    def _materialize(self, key: Key):
+        """The authoritative bytes, wherever home is (no modeled cost)."""
+        if key in self._spill_row:
+            return self._read_spill(key)
+        return self.base.get(key)
+
+    # -- store interface ---------------------------------------------------
+    @property
+    def layers(self):
+        """Per-layer weight dicts (HostExpertStore parity: the SlotBuffer
+        reads shapes/dtypes from here)."""
+        return self.base.layers
+
+    def tier_of(self, key: Key) -> int:
+        """Fastest tier a fetch of ``key`` would be served from."""
+        if key in self._cache:
+            return TIER_HOST
+        return self.ledger.tier_of(key)
+
+    def prefetch_horizon(self, key: Key) -> int:
+        """MoE layers of lookahead this key needs: deeper tiers are
+        requested earlier so their longer fetch hides behind more
+        compute."""
+        return self.tc.horizons[self.tier_of(key)]
+
+    def fetch(self, key: Key):
+        """(weights, FetchInfo): serve from the fastest resident tier,
+        promoting peer/disk fetches into the tier-1 cache on the way."""
+        nbytes = self.bytes_per_expert
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            w = self._cache[key]
+            tier = TIER_HOST
+        else:
+            tier = self.ledger.tier_of(key)
+            if tier == TIER_DISK:
+                w = self._read_spill(key)
+            else:
+                w = self.base.get(key)
+            if tier != TIER_HOST and self.tc.cache_experts > 0:
+                self._promote(key, w)
+                self.stats.promotions += 1
+        self._on_device[key] = w
+        self.stats.count(tier, nbytes)
+        return w, FetchInfo(tier, nbytes, self.tc.tier_duration(tier, nbytes))
+
+    def get(self, key: Key):
+        """Weights only (HostExpertStore parity API)."""
+        return self.fetch(key)[0]
+
+    def demote(self, key: Key) -> None:
+        """Tier-0 eviction callback: keep the bytes one tier down instead
+        of dropping them — refresh (or insert) the tier-1 cached copy so a
+        re-fetch is a host fetch, not a peer/disk one. The bytes come from
+        the fetch that filled the slot (``_on_device``), not a fresh
+        slow-tier read — demotion is a move down, never new I/O."""
+        w = self._on_device.pop(key, None)
+        if self.tc.cache_experts <= 0:
+            return                      # no tier-1 cache to demote into
+        if self.ledger.home(key)[1] == TIER_HOST:
+            return                      # home IS local DRAM: nothing to do
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return
+        self._promote(key, w if w is not None else self._materialize(key))
+        self.stats.demotions += 1
+
+    # -- tier-1 cache ------------------------------------------------------
+    def _promote(self, key: Key, weights) -> None:
+        if self.tc.cache_experts <= 0:
+            return
+        self._cache[key] = weights
+        self._cache.move_to_end(key)
+        self.ledger.add_copy(key, TIER_HOST)
+        self._shrink_cache()
+
+    def _shrink_cache(self) -> None:
+        """LRU-evict unpinned cached copies back to capacity. Pinned
+        entries are skipped — the cache may transiently exceed its cap
+        while every resident copy is pinned."""
+        over = len(self._cache) - self.tc.cache_experts
+        if over <= 0:
+            return
+        for key in [k for k in self._cache
+                    if not self.ledger.pinned(k)][:over]:
+            del self._cache[key]
+            self.ledger.drop_copy(key, TIER_HOST)
+            self.stats.cache_evictions += 1
+
+    # -- pinning -----------------------------------------------------------
+    def pin(self, key: Key) -> None:
+        """Refcounted guard: pinned keys' copies are unevictable at every
+        tier (the home copy is never evictable anyway)."""
+        self.ledger.pin(key)
+
+    def unpin(self, key: Key) -> None:
+        self.ledger.unpin(key)
+        self._shrink_cache()            # deferred evictions apply now
+
+    # -- re-sharding -------------------------------------------------------
+    def rebalance(self, num_shards: int) -> int:
+        """Re-home every key onto a ring of ``num_shards`` shards (grow or
+        shrink); returns how many keys moved shard. Consistent hashing
+        keeps the move count near ``moved/total ~ changed_shards/total``;
+        a unit test pins stability. DRAM/disk split per shard is
+        recomputed and the spill file rebuilt; the ring (not the original
+        ``TierConfig.num_shards``) is authoritative afterwards. Pin
+        refcounts and tier-1 cached copies survive the move."""
+        assert num_shards > self.tc.local_shard, \
+            "cannot remove the local shard"
+        old = dict(self.home_shard)
+        for s in set(self.ring.shards):
+            if s >= num_shards:
+                self.ring.remove_shard(s)
+        for s in range(num_shards):
+            if s not in self.ring.shards:
+                self.ring.add_shard(s)
+        self.close()
+        # rebuild placement from scratch, carrying pins over (a pinned
+        # expert stays pinned through a re-shard). Cached copies survive
+        # too: they are tier-1 copies whatever the new home is — unless
+        # the new home IS tier 1, which would double-res; drop those.
+        pins = dict(self.ledger._pins)
+        self.ledger = ResidencyLedger()
+        self._place_all(self._spill_dir)
+        self.ledger._pins = pins
+        for key in list(self._cache):
+            if self.ledger.home(key)[1] == TIER_HOST:
+                del self._cache[key]
+            else:
+                self.ledger.add_copy(key, TIER_HOST)
+        return sum(1 for k, s in self.home_shard.items() if old.get(k) != s)

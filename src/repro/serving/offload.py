@@ -6,18 +6,27 @@ HostExpertStore keeps every MoE layer's expert weights as host numpy arrays
 living on device (= "HBM"); fetching an expert is a host->device
 ``device_put`` into a slot. The control plane (which expert sits in which
 slot, eviction order, prefetch decisions) is core.cache.ExpertCache.
+HostExpertStore is also the single-host degenerate of the expert-store
+interface — serving/expertstore.py generalises it to the tiered
+device/host/peer/disk hierarchy behind the same ``fetch``/``demote``
+calls, which is why SlotBuffer routes through ``store.fetch`` and demotes
+on release.
 
-Overlap model: the engines prefetch the *next* MoE layer's predicted experts
-before the current layer's attention runs, double-buffering the slot stack —
-filled slots for layer i+1 land while layer i computes. OverlapTracker
-models the single serial host->device channel against a compute clock:
-``submit`` queues a transfer, ``advance`` credits compute time that hides it,
-``wait`` charges only the un-overlapped remainder as stall. With zero
-credited compute the stall degenerates to the blocking demand-fetch model
+Overlap model: the engines prefetch predicted experts before the layers
+that need them run, double-buffering the slot stack — filled slots for
+layer i+1 land while layer i computes (slow-tier experts are submitted
+additional layers early, see the horizon-aware prefetch in
+serving/engine.py). OverlapTracker models one serial async channel *per
+storage tier* against a shared compute clock: ``submit`` queues a transfer
+on its tier's channel, ``advance`` credits compute time that hides it,
+``wait`` charges only the un-overlapped remainder as stall, attributed to
+the critical tier (``stall_by_tier``). With zero credited compute the
+stall degenerates to the blocking demand-fetch model
 (``SlotBuffer.sim_fetch_s``) — tests pin both ends.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, Iterable, Optional, Tuple
 
 import jax.numpy as jnp
@@ -27,9 +36,40 @@ from repro.core.cache import ExpertCache
 
 Key = Tuple[int, int]  # (moe_layer_index, expert_id)
 
+# Storage tiers, from the serving process's point of view. Tier 0 (the
+# device slot buffer) is the ExpertCache/SlotBuffer's business; a *store*
+# serves fetches from tier 1 (local host DRAM), tier 2 (a peer host's DRAM
+# over the interconnect) or tier 3 (disk/mmap spill). HostExpertStore is
+# the degenerate single-host store: everything is tier 1. The full
+# hierarchy lives in serving/expertstore.py.
+TIER_DEVICE, TIER_HOST, TIER_PEER, TIER_DISK = 0, 1, 2, 3
+
+
+@dataclass
+class FetchInfo:
+    """Where a store served an expert fetch from, and the modeled cost.
+
+    ``duration`` is the modeled transfer time for the whole path into the
+    device slot; ``None`` means "use the caller's host-bandwidth model"
+    (the single-host back-compat default)."""
+    tier: int
+    nbytes: int
+    duration: Optional[float] = None
+
 
 class HostExpertStore:
-    """Expert FFN weights per MoE layer, host-side."""
+    """Expert FFN weights per MoE layer, host-side.
+
+    Also the reference implementation of the *expert store* interface the
+    engines consume (``fetch``/``tier_of``/``demote``/``prefetch_horizon``):
+    one host's DRAM holds every expert, so every fetch is a tier-1 hit and
+    there is nothing to demote into. ``serving/expertstore.py`` generalises
+    this to the device/host/peer/disk hierarchy behind the same interface.
+    """
+
+    #: how many MoE layers ahead prefetch needs to look for this store —
+    #: one layer of compute is enough to hide a host->device transfer
+    max_horizon = 1
 
     def __init__(self, expert_params_per_layer):
         """expert_params_per_layer: list (per MoE layer) of dicts with
@@ -50,32 +90,72 @@ class HostExpertStore:
         lp = self.layers[layer]
         return (lp["w_gate"][e], lp["w_up"][e], lp["w_down"][e])
 
+    # --- store interface --------------------------------------------------
+    def fetch(self, key: Key):
+        """(weights, FetchInfo): everything lives in local DRAM."""
+        w = self.get(key)
+        return w, FetchInfo(TIER_HOST, self.bytes_per_expert)
+
+    def tier_of(self, key: Key) -> int:
+        return TIER_HOST
+
+    def prefetch_horizon(self, key: Key) -> int:
+        return 1
+
+    def demote(self, key: Key) -> None:
+        """Tier-0 eviction callback: the DRAM copy already exists."""
+
 
 class OverlapTracker:
-    """Modeled timeline of one serial host->device fetch channel.
+    """Modeled timeline of the async fetch channels against a compute clock.
 
-    ``clock`` is modeled compute time; transfers queue on ``channel_free``.
-    A transfer submitted at compute time t starts at max(t, channel_free)
-    and completes transfer_s later. ``wait`` advances the clock to the
+    ``clock`` is modeled compute time. Each storage *tier* owns one serial
+    fetch channel (host->device DMA, the peer interconnect, the disk queue);
+    transfers submitted to a tier queue on that tier's ``channel_free``
+    while different tiers' transfers overlap each other. A transfer
+    submitted at compute time t starts at max(t, channel_free[tier]) and
+    completes ``duration`` later. ``wait`` advances the clock to the
     completion time of the latest needed transfer, charging the gap as
-    stall — exactly the part of the fetch NOT hidden by compute.
+    stall — exactly the part of the fetch NOT hidden by compute — and
+    attributes that stall to the tier of the transfer that finished last
+    (the critical path), so stall reports break down by tier.
+
+    The single-tier default (every ``submit`` at tier 1, duration from
+    ``host_bw``) reproduces the original one-serial-channel model exactly.
     """
 
     def __init__(self, host_bw: float = 100e9):
         self.host_bw = host_bw
         self.clock = 0.0
-        self.channel_free = 0.0
+        self._channel_free: Dict[int, float] = {}  # tier -> busy-until time
         self.pending: Dict[Key, float] = {}   # key -> modeled completion time
         self._dur: Dict[Key, float] = {}      # key -> transfer duration
+        self._tier: Dict[Key, int] = {}       # key -> submitting tier
         self.stall_s = 0.0
         self.overlapped_s = 0.0               # transfer time hidden by compute
+        self.stall_by_tier: Dict[int, float] = {}
+        self.overlapped_by_tier: Dict[int, float] = {}
 
-    def submit(self, key: Key, nbytes: int) -> None:
-        start = max(self.clock, self.channel_free)
-        dur = nbytes / self.host_bw
-        self.channel_free = start + dur
+    @property
+    def channel_free(self) -> float:
+        """Latest busy-until time across tier channels (back-compat view
+        of the original single-channel attribute)."""
+        return max(self._channel_free.values(), default=0.0)
+
+    def submit(self, key: Key, nbytes: int, tier: int = TIER_HOST,
+               duration: Optional[float] = None) -> None:
+        dur = nbytes / self.host_bw if duration is None else duration
+        start = max(self.clock, self._channel_free.get(tier, 0.0))
+        self._channel_free[tier] = start + dur
         self.pending[key] = start + dur
         self._dur[key] = dur
+        self._tier[key] = tier
+
+    def drop(self, key: Key) -> None:
+        """Forget a pending transfer (its slot was released before use)."""
+        self.pending.pop(key, None)
+        self._dur.pop(key, None)
+        self._tier.pop(key, None)
 
     def advance(self, compute_s: float) -> None:
         """Compute time that overlaps any in-flight transfers."""
@@ -87,17 +167,39 @@ class OverlapTracker:
         needed = [k for k in keys if k in self.pending]
         if not needed:
             return 0.0
-        t = max(self.pending.pop(k) for k in needed)
-        dur = sum(self._dur.pop(k, 0.0) for k in needed)
+        done = {k: self.pending.pop(k) for k in needed}
+        t = max(done.values())
+        crit_tier = self._tier.get(max(done, key=done.get), TIER_HOST)
         stall = max(0.0, t - self.clock)
         self.stall_s += stall
-        self.overlapped_s += max(0.0, dur - stall)
+        self.stall_by_tier[crit_tier] = (
+            self.stall_by_tier.get(crit_tier, 0.0) + stall)
+        # transfer time not hidden by compute is stall; distribute the
+        # hidden remainder over tiers, absorbing the stall into the
+        # latest-completing transfers first (the critical path)
+        remaining = stall
+        for k in sorted(needed, key=done.get, reverse=True):
+            dur = self._dur.pop(k, 0.0)
+            tier = self._tier.pop(k, TIER_HOST)
+            absorbed = min(dur, remaining)
+            remaining -= absorbed
+            self.overlapped_s += dur - absorbed
+            self.overlapped_by_tier[tier] = (
+                self.overlapped_by_tier.get(tier, 0.0) + dur - absorbed)
         self.clock = max(self.clock, t)
         return stall
 
 
 class SlotBuffer:
-    """Fixed-capacity device buffer of expert slots + host slot table."""
+    """Fixed-capacity device buffer of expert slots + host slot table.
+
+    ``store`` is anything implementing the expert-store interface
+    (``HostExpertStore`` or ``serving/expertstore.TieredExpertStore``):
+    ``fill`` pulls weights through ``store.fetch`` — charging the modeled
+    transfer to the source tier's channel — and ``release`` (the tier-0
+    eviction callback) *demotes* the expert into the store's host-side
+    cache instead of dropping it, so a re-fetch is served from tier 1
+    rather than the slow tier it originally came from."""
 
     def __init__(self, store: HostExpertStore, n_slots: int,
                  host_bw: float = 100e9,
@@ -122,22 +224,24 @@ class SlotBuffer:
         slot = self.slot_of.pop(key)
         self._free.append(slot)
         if self.tracker is not None:
-            self.tracker.pending.pop(key, None)
-            self.tracker._dur.pop(key, None)
+            self.tracker.drop(key)
+        self.store.demote(key)
 
     def fill(self, key: Key) -> None:
         slot = self._free.pop()
         self.slot_of[key] = slot
-        wg, wu, wd = self.store.get(key)
+        (wg, wu, wd), info = self.store.fetch(key)
         self.w_gate = self.w_gate.at[slot].set(jnp.asarray(wg))
         self.w_up = self.w_up.at[slot].set(jnp.asarray(wu))
         self.w_down = self.w_down.at[slot].set(jnp.asarray(wd))
         nbytes = wg.nbytes + wu.nbytes + wd.nbytes
+        dur = (info.duration if info.duration is not None
+               else nbytes / self.host_bw)
         self.fetch_bytes += nbytes
         self.fetch_count += 1
-        self.sim_fetch_s += nbytes / self.host_bw
+        self.sim_fetch_s += dur      # blocking model: every fetch stalls
         if self.tracker is not None:
-            self.tracker.submit(key, nbytes)
+            self.tracker.submit(key, nbytes, tier=info.tier, duration=dur)
 
     def gather(self, keys) -> tuple:
         """Return (k, ...) stacked expert weights for resident keys."""

@@ -42,7 +42,8 @@ class PrefixStats:
     misses: int = 0              # admissions that matched nothing
     hit_tokens: int = 0          # prompt positions whose prefill was skipped
     extensions: int = 0          # blocks adopted at a mid-prefill boundary
-    inserted_blocks: int = 0     # blocks newly indexed
+    inserted_blocks: int = 0     # blocks newly indexed (incl. tails)
+    inserted_tails: int = 0      # partial tail blocks newly indexed
     evicted_blocks: int = 0      # indexed blocks freed under pool pressure
 
     @property
@@ -51,17 +52,25 @@ class PrefixStats:
 
 
 class _Node:
-    """One cached block: trie child key is the block's token tuple."""
+    """One cached block: trie child key is the block's token tuple.
 
-    __slots__ = ("bid", "experts", "children", "parent", "tick")
+    ``children`` holds whole-block continuations; ``tails`` holds
+    *partial* tail blocks (< block_size prompt tokens, always leaves) —
+    the sub-block index. A tail node's ``n`` is how many prompt positions
+    of its block are valid; whole-block nodes have ``n == block_size``."""
+
+    __slots__ = ("bid", "experts", "children", "tails", "parent", "tick",
+                 "n")
 
     def __init__(self, bid: int, experts: Dict[int, np.ndarray],
-                 parent: Optional["_Node"]):
+                 parent: Optional["_Node"], n: int = 0):
         self.bid = bid
         self.experts = experts          # moe-layer ordinal -> expert ids
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.tails: Dict[Tuple[int, ...], "_Node"] = {}
         self.parent = parent
         self.tick = 0
+        self.n = n                      # valid prompt positions in the block
 
 
 @dataclass
@@ -148,16 +157,48 @@ class PrefixCache:
         nodes = self.walk(tokens, blocks_for(limit, self.bs))
         m = min(len(nodes) * self.bs, limit)
         nodes = nodes[:blocks_for(m, self.bs)]
-        if not nodes:
+        tail = None
+        if m == len(nodes) * self.bs and m < limit:
+            # sub-block matching: the first un-indexed whole block may
+            # still be covered by an indexed partial tail — COW already
+            # makes partial *use* of an adopted block safe (the adopter
+            # privatises it before writing position m+p), so any common
+            # prefix of a cached tail is usable KV
+            parent = nodes[-1] if nodes else self.root
+            tail, p = self._best_tail(parent, tokens[m:limit])
+            if tail is not None:
+                self._touch(tail)
+                m += p
+        if not nodes and tail is None:
             return PrefixMatch()
         merged: Dict[int, set] = {}
         for node in nodes:
             self._touch(node)
             _merge_experts(merged, node.experts)
+        bids = [n.bid for n in nodes]
+        if tail is not None:
+            _merge_experts(merged, tail.experts)
+            bids.append(tail.bid)
         return PrefixMatch(
-            bids=[n.bid for n in nodes], tokens=m,
+            bids=bids, tokens=m,
             experts={mi: np.array(sorted(s), np.int64)
                      for mi, s in merged.items()})
+
+    @staticmethod
+    def _best_tail(parent: _Node, rem: Sequence[int]):
+        """The cached partial tail sharing the longest common prefix with
+        ``rem`` (the prompt's next un-indexed positions). Only the common
+        prefix is usable — the adopter overwrites the block from there."""
+        best, best_p = None, 0
+        for key, node in parent.tails.items():
+            p = 0
+            for a, b in zip(key[:len(rem)], rem):
+                if a != b:
+                    break
+                p += 1
+            if p > best_p:
+                best, best_p = node, p
+        return best, best_p
 
     def extend(self, tokens: Sequence[int], depth: int) -> Optional[_Node]:
         """Mid-prefill extension: the node for block ``depth`` of
@@ -174,12 +215,17 @@ class PrefixCache:
     # ------------------------------------------------------------------
     def insert(self, tokens: Sequence[int], n_blocks: int,
                bids: Sequence[int],
-               experts_by_block: Dict[int, Dict[int, set]]) -> int:
+               experts_by_block: Dict[int, Dict[int, set]],
+               tail_len: int = 0) -> int:
         """Index blocks ``0..n_blocks-1`` of ``tokens`` (each must be a
         whole block of *prompt* positions whose KV ``bids`` holds). Blocks
         already indexed are kept (first writer wins — their KV is
-        identical by construction); new nodes retain their block. Returns
-        the number of blocks newly indexed. Idempotent."""
+        identical by construction); new nodes retain their block. With
+        ``tail_len > 0``, block ``n_blocks`` is additionally indexed as a
+        *partial tail* whose first ``tail_len`` positions are final prompt
+        KV (the owner may keep decoding into the block's remainder — an
+        adopter only ever uses the tail's prompt positions, copy-on-write).
+        Returns the number of blocks newly indexed. Idempotent."""
         node = self.root
         added = 0
         for d in range(n_blocks):
@@ -190,13 +236,31 @@ class PrefixCache:
                 self.pool.retain(bid)
                 exp = {mi: np.array(sorted(s), np.int64)
                        for mi, s in experts_by_block.get(d, {}).items()}
-                child = _Node(bid, exp, node)
+                child = _Node(bid, exp, node, n=self.bs)
                 node.children[key] = child
                 self._nodes += 1
                 added += 1
                 self.stats.inserted_blocks += 1
             self._touch(child)
             node = child
+        if tail_len > 0:
+            assert tail_len < self.bs, "a full tail is a whole block"
+            start = n_blocks * self.bs
+            key = tuple(tokens[start: start + tail_len])
+            tail = node.tails.get(key)
+            if tail is None:
+                bid = bids[n_blocks]
+                self.pool.retain(bid)
+                exp = {mi: np.array(sorted(s), np.int64)
+                       for mi, s in
+                       experts_by_block.get(n_blocks, {}).items()}
+                tail = _Node(bid, exp, node, n=tail_len)
+                node.tails[key] = tail
+                self._nodes += 1
+                added += 1
+                self.stats.inserted_blocks += 1
+                self.stats.inserted_tails += 1
+            self._touch(tail)
         self.enforce_cap()
         return added
 
@@ -208,19 +272,23 @@ class PrefixCache:
             self.evict(self._nodes - self.max_blocks)
 
     # ------------------------------------------------------------------
-    def _evictable(self, exclude) -> List[Tuple[Tuple[int, ...], _Node]]:
-        """LRU-ordered leaves whose block has no holder but the cache."""
+    def _evictable(self, exclude):
+        """LRU-ordered leaves whose block has no holder but the cache.
+        A node with live tail children is not a leaf — inner nodes are
+        never evicted before anything hanging off them."""
         out = []
         stack = [self.root]
         while stack:
             node = stack.pop()
-            for key, child in node.children.items():
-                if child.children:
+            for store, key, child in (
+                    [("children", k, c) for k, c in node.children.items()]
+                    + [("tails", k, c) for k, c in node.tails.items()]):
+                if child.children or child.tails:
                     stack.append(child)
                 elif (self.pool.ref_count(child.bid) == 1
                       and child.bid not in exclude):
-                    out.append((key, child))
-        out.sort(key=lambda kv: kv[1].tick)
+                    out.append((store, key, child))
+        out.sort(key=lambda kv: kv[2].tick)
         return out
 
     def evict(self, n_blocks: int, exclude=()) -> int:
@@ -237,10 +305,10 @@ class PrefixCache:
             victims = self._evictable(exclude)
             if not victims:
                 break
-            for key, node in victims:
+            for store, key, node in victims:
                 if freed >= n_blocks:
                     break
-                node.parent.children.pop(key)
+                getattr(node.parent, store).pop(key)
                 self.pool.free(node.bid)
                 self._nodes -= 1
                 freed += 1

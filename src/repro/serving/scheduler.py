@@ -118,18 +118,23 @@ class BatchedOffloadEngine:
     ``serve`` (a :class:`ServeConfig`) bundles the batching/paging/kernel
     knobs in one place and overrides the individual keyword arguments;
     ``use_kernel``/``kernel_backend`` select the paged flash-decode read
-    path (``use_kernel=False`` is the gather parity reference).
+    path (``use_kernel=False`` is the gather parity reference); ``tiers``
+    (a :class:`~repro.serving.expertstore.TierConfig`) swaps the
+    single-host expert store for the tiered device/host/peer/disk
+    hierarchy with horizon-aware prefetch — streams stay token-identical,
+    only the storage substrate and the modeled fetch timeline change.
     """
 
     def __init__(self, model, params, policy: PolicySpec, capacity: int,
                  eviction: str = "lru", host_bw: float = 100e9,
                  expert_backend: str = "jnp", max_batch: int = 4,
-                 layer_compute_s: float = 0.0, paged: bool = True,
+                 layer_compute_s=0.0, paged: bool = True,
                  block_size: int = 8, kv_blocks: Optional[int] = None,
                  prefill_chunk: int = 8, use_kernel: bool = True,
                  kernel_backend: Optional[str] = None,
                  prefix_cache: bool = False,
                  prefix_cache_blocks: Optional[int] = None,
+                 tiers=None,
                  serve: Optional[ServeConfig] = None):
         if serve is None:
             serve = ServeConfig(max_batch=max_batch, paged=paged,
@@ -138,7 +143,9 @@ class BatchedOffloadEngine:
                                 use_kernel=use_kernel,
                                 kernel_backend=kernel_backend,
                                 prefix_cache=prefix_cache,
-                                prefix_cache_blocks=prefix_cache_blocks)
+                                prefix_cache_blocks=prefix_cache_blocks,
+                                tiers=tiers,
+                                layer_compute_s=layer_compute_s)
         self.serve = serve
         max_batch = serve.max_batch
         need = max_batch * model.cfg.moe.top_k
@@ -152,9 +159,10 @@ class BatchedOffloadEngine:
                                         capacity // model.cfg.moe.top_k))
         self.core = DecodeCore(model, params, capacity, eviction, host_bw,
                                expert_backend, max_batch=max_batch,
-                               layer_compute_s=layer_compute_s,
+                               layer_compute_s=serve.layer_compute_s,
                                max_prefill_chunk=self.prefill_chunk,
-                               kernel=serve.resolve_kernel())
+                               kernel=serve.resolve_kernel(),
+                               tiers=serve.tiers)
         self.cfg = self.core.cfg
         self.max_batch = max_batch
         self.paged = serve.paged and self.core.paged_ok
@@ -399,13 +407,25 @@ class BatchedOffloadEngine:
 
     def _insert_prefix(self, req: Request) -> None:
         """Publish the request's completed whole-prompt blocks into the
-        radix index (idempotent; already-indexed blocks are kept)."""
+        radix index (idempotent; already-indexed blocks are kept). Once
+        every prompt position is processed, the partial tail block (prompt
+        length % block_size positions) is indexed too — sub-block
+        matching: a future request sharing only part of a block still
+        adopts its KV copy-on-write."""
         if self.prefix is None or req.table is None:
             return
-        n_blocks = min(len(req.prompt), req.t) // self.block_size
-        if n_blocks > 0:
+        plen = len(req.prompt)
+        done = min(plen, req.t)
+        n_blocks = done // self.block_size
+        tail_len = plen % self.block_size if done == plen else 0
+        if tail_len and (n_blocks >= len(req.table.ids)
+                         or req.table.is_shared(n_blocks)):
+            # safety: no owned tail block to index (still an adopted
+            # read-only copy — then it is already indexed by its owner)
+            tail_len = 0
+        if n_blocks > 0 or tail_len > 0:
             self.prefix.insert(req.prompt, n_blocks, req.table.ids,
-                               req.block_experts)
+                               req.block_experts, tail_len=tail_len)
 
     def _extend_prefix(self, req: Request) -> None:
         """At a chunk boundary, adopt blocks a sibling has published since

@@ -547,3 +547,77 @@ def test_prefix_pool_never_double_frees_or_leaks(actions, num_blocks,
     pc.evict(pc.cached_blocks)
     pool.check_leaks(expected_in_use=0)
     assert pool.reserved == 0
+
+
+# ---------------------------------------------------------------------------
+# sub-block (partial tail) matching
+
+def test_index_tail_insert_and_match():
+    """Partial tail blocks are indexed and matched on the longest common
+    prefix — the sub-block keys whole-block tries could never share."""
+    pool, pc = _mk(bs=4)
+    toks = list(range(40, 50))                       # 2 whole blocks + 2
+    bids = _stash(pool, 3)
+    added = pc.insert(toks, 2, bids, {2: {0: {5}}}, tail_len=2)
+    assert added == 3 and pc.stats.inserted_tails == 1
+    assert pc.cached_blocks == 3
+    assert pool.ref_count(bids[2]) == 2
+
+    # full tail match: 10 of 10 positions covered
+    m = pc.match(toks + [7, 7], limit=12)
+    assert m.tokens == 10 and m.bids == bids
+    assert m.experts[0].tolist() == [5]
+    # partial tail match: common prefix of the tail only
+    m2 = pc.match(toks[:9] + [999, 999], limit=12)
+    assert m2.tokens == 9 and m2.bids == bids
+    # limit caps inside the tail
+    assert pc.match(toks, limit=9).tokens == 9
+    # a longer competing tail wins
+    bid4 = _stash(pool, 1)[0]
+    pc.insert(toks[:8] + [50, 51, 52], 2, bids[:2] + [bid4], {}, tail_len=3)
+    assert pc.match(toks[:8] + [50, 51, 52, 53], limit=12).tokens == 11
+    # idempotent tail re-insert
+    assert pc.insert(toks, 2, bids, {}, tail_len=2) == 0
+
+
+def test_index_tail_eviction_last():
+    """Tail nodes are leaves: they evict before their parents, and a node
+    with only tail children is protected like any inner node."""
+    pool, pc = _mk(bs=4)
+    toks = list(range(6))
+    bids = _stash(pool, 2)
+    pc.insert(toks, 1, bids, {}, tail_len=2)
+    for bid in bids:
+        pool.free(bid)                               # "request retired"
+    assert pc.evict(1) == 1                          # the tail goes first
+    assert pc.cached_blocks == 1
+    assert pc.match(toks, limit=6).tokens == 4       # whole block remains
+    assert pc.evict(1) == 1
+    assert pc.cached_blocks == 0
+    pool.check_leaks(expected_in_use=0)
+
+
+def test_sub_block_prefix_parity_and_savings(backbone):
+    """Prompts sharing a NON-block-aligned prefix (6 tokens at bs=4):
+    whole-block matching alone could share only 4; sub-block matching
+    shares the partial tail too — streams must stay token-identical and
+    hit_tokens must exceed the block-aligned bound."""
+    cfg, model, params, _ = backbone
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    shared = SYS[:6]                                 # 1.5 blocks at bs=4
+    prompts = [shared + t for t in TAILS[:6]]
+    off = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                               block_size=4)
+    ref = off.generate(prompts, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    on = BatchedOffloadEngine(model, params, None, n_total, max_batch=2,
+                              block_size=4, prefix_cache=True)
+    outs = on.generate(prompts, max_new=MAX_NEW, cache_len=CACHE_LEN)
+    assert outs == ref
+    st = on.prefix.stats
+    assert st.inserted_tails > 0                     # tails really indexed
+    # at least one late admission matched past the whole-block boundary:
+    # more tokens skipped than whole-block matching could ever deliver
+    n_hit_waves = len(prompts) - 2                   # first wave must miss
+    assert st.hit_tokens > 4 * n_hit_waves
+    assert on.pool.stats.cow_copies > 0              # tail adopts COWed
+    on.pool.check_leaks(expected_in_use=on.prefix.cached_blocks)
