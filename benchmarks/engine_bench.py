@@ -38,6 +38,16 @@ tier-0 capacity (streams must stay token-identical to the single-host
 engine; horizon-aware must shrink un-overlapped stall):
   PYTHONPATH=src python -m benchmarks.engine_bench --tiny --tiers \
       --out artifacts/engine_bench_tiers.json
+
+SLO mode (--slo): an open-loop Poisson load sweep (serving/workload.py) of
+an interactive class (urgent, tight TTFT SLO) mixed with long batch
+requests, served with SLO-aware preemptive scheduling on vs off — reports
+p50/p95/p99 TTFT, per-token latency, preemption counts, and goodput under
+SLO per arrival rate, and asserts that preemption beats the no-preemption
+baseline on p99 TTFT AND goodput at >=1 overload point with every stream
+token-identical to an uncontended reference run:
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --slo \
+      --out artifacts/engine_bench_slo.json
 """
 from __future__ import annotations
 
@@ -385,6 +395,163 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
     }
 
 
+def _slo_sweep(model, params, cfg, n_requests: int, load_factors,
+               log=print):
+    """Open-loop Poisson load sweep with SLO-aware preemption on vs off.
+
+    Two priority classes share the engine: "interactive" (urgent: short
+    prompts, tight TTFT SLO measured in decode-program times so the budget
+    tracks the machine) and "batch" (long prompts + long decode, no SLO).
+    At each arrival rate the SAME workload is replayed through a FIFO
+    engine and a preemptive engine; both must produce streams
+    token-identical to an uncontended closed-loop reference. At >=1
+    overload point the preemptive engine must beat FIFO on the urgent
+    class's p99 TTFT AND on goodput-under-SLO — the acceptance this mode
+    pins in CI."""
+    from repro.core.metrics import latency_stats
+    from repro.core.tracing import moe_layer_ids
+    from repro.serving.config import ServeConfig
+    from repro.serving.scheduler import BatchedOffloadEngine
+    from repro.serving.workload import (SLO, PriorityClass, poisson_workload,
+                                        scale_rate)
+
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    cache_len, batch, bs = 96, 2, 8
+
+    def build(preempt):
+        sc = ServeConfig(max_batch=batch, block_size=bs, prefill_chunk=8,
+                         prefix_cache=True, preemption=preempt)
+        return BatchedOffloadEngine(model, params, None, n_total, serve=sc)
+
+    engines = {"fifo": build(False), "preempt": build(True)}
+    for eng in engines.values():
+        # warm every bucket the sweep will hit — batch-class long prefill,
+        # interactive-class short prefill, 1- and 2-lane decode, and the
+        # 1/2/4-wide prefill tails a preemption resume can produce — so
+        # compile time never lands in a measured run
+        eng.generate([list(range(1, 33)), [3, 5, 7, 9, 2, 4]], max_new=24,
+                     cache_len=cache_len)
+        eng.generate([[7, 2], [9, 4, 1]], max_new=2, cache_len=cache_len)
+        eng.generate([[8, 3, 6, 5, 2]], max_new=2, cache_len=cache_len)
+
+    # program time on the warmed engine sets the SLO budgets and the
+    # capacity estimate, so the sweep adapts to the machine
+    eng = engines["fifo"]
+    p0 = eng.stats.steps + eng.stats.prefill_chunks
+    t0 = time.perf_counter()
+    eng.generate([list(range(1, 33))], max_new=24, cache_len=cache_len)
+    progs = eng.stats.steps + eng.stats.prefill_chunks - p0
+    prog_s = (time.perf_counter() - t0) / max(progs, 1)
+
+    inter = PriorityClass("interactive", priority=0, weight=0.35,
+                          prompt_len=6, max_new=4,
+                          slo=SLO(ttft_s=10 * prog_s))
+    batch_cls = PriorityClass("batch", priority=2, weight=0.65,
+                              prompt_len=32, max_new=64, slo=None)
+    # programs per request: ceil(prompt/chunk) prefill + max_new+1 decode
+    progs_per_req = 0.35 * (1 + 5) + 0.65 * (4 + 65)
+    capacity_rps = batch / (progs_per_req * prog_s)
+    base = poisson_workload(n_requests, capacity_rps, (inter, batch_cls),
+                            vocab_size=cfg.vocab_size, seed=7)
+    n_inter = sum(1 for w in base if w.priority == 0)
+    assert 0 < n_inter < len(base), "degenerate class mix: change the seed"
+
+    # uncontended closed-loop reference streams (parity target)
+    ref_eng = BatchedOffloadEngine(model, params, None, n_total,
+                                   max_batch=4)
+    ref_eng.generate([[3, 5, 7]], max_new=2, cache_len=cache_len)  # warm
+    rids = [ref_eng.submit(w.prompt, w.max_new, w.temperature, w.seed)
+            for w in base]
+    ref_res = ref_eng.run(cache_len)
+    ref_streams = [ref_res[r] for r in rids]
+
+    log(f"  slo sweep: {len(base)} requests ({n_inter} interactive), "
+        f"prog {prog_s * 1e3:.1f}ms, capacity ~{capacity_rps:.2f} rps, "
+        f"interactive TTFT SLO {10 * prog_s * 1e3:.0f}ms")
+    log("  load_x,mode,interactive p50/p95/p99 TTFT ms,goodput rps,"
+        "slo_attain,preempts")
+    sweep = []
+    for factor in load_factors:
+        wl = scale_rate(base, factor)
+        row = {"load_x": factor, "rate_rps": capacity_rps * factor}
+        for name, eng in engines.items():
+            pre0 = eng.stats.preemptions
+            res = eng.run_workload(wl, cache_len)
+            streams = [res[r] for r in sorted(res)]
+            assert streams == ref_streams, (
+                f"{name} streams diverged at load {factor}x")
+            lat = eng.stats.latency
+            pre = eng.stats.preemptions - pre0
+            d = lat.as_dict()
+            d["preemptions"] = pre
+            # per-class views: feed record subsets back through the
+            # same summariser
+            recs = eng.records().values()
+            inter_lat = latency_stats(
+                (r for r in recs if r.priority == 0), lat.elapsed_s)
+            d["interactive"] = inter_lat.as_dict()
+            row[name] = d
+            log(f"  {factor:.1f},{name},"
+                f"{inter_lat.ttft_p50_s * 1e3:.0f}/"
+                f"{inter_lat.ttft_p95_s * 1e3:.0f}/"
+                f"{inter_lat.ttft_p99_s * 1e3:.0f},"
+                f"{lat.goodput_rps:.2f},{lat.slo_attainment:.2f},{pre}")
+        row["streams_identical"] = True
+        # the comparison axis is the SLO-bearing class: preemption spends
+        # best-effort batch TTFT to protect urgent TTFT, so overall p99
+        # measures the wrong thing
+        row["preempt_beats_fifo"] = bool(
+            row["preempt"]["interactive"]["ttft_p99_s"]
+            < row["fifo"]["interactive"]["ttft_p99_s"]
+            and row["preempt"]["goodput_rps"] >= row["fifo"]["goodput_rps"])
+        sweep.append(row)
+
+    # the acceptance: at >=1 overload point, preemption wins on BOTH the
+    # urgent class's p99 TTFT and goodput-under-SLO, and really preempted
+    wins = [r for r in sweep
+            if r["load_x"] > 1.0 and r["preempt_beats_fifo"]
+            and r["preempt"]["preemptions"] > 0]
+    assert wins, "preemption never beat FIFO at an overload point"
+    log(f"  preemption wins at load {[r['load_x'] for r in wins]}x "
+        "(lower p99 TTFT, no worse goodput, preemptions > 0)")
+    return {
+        "sweep": sweep,
+        "streams_identical": True,
+        "prog_s": prog_s,
+        "capacity_rps_est": capacity_rps,
+        "slo_ttft_s": 10 * prog_s,
+        "n_requests": len(base),
+        "n_interactive": n_inter,
+        "win_load_x": [r["load_x"] for r in wins],
+        "batch": batch,
+    }
+
+
+def _run_slo(n_requests, load_factors, out_path=None, log=print):
+    """Build the untrained reduced backbone (scheduling + stream parity
+    only — prediction quality is the policy benches' job), run the SLO
+    load sweep, write the artifact."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    t0 = time.time()
+    cfg = get_reduced("deepseek-v2-lite")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    results = _slo_sweep(model, params, cfg, n_requests=n_requests,
+                         load_factors=load_factors, log=log)
+    results["wall_s"] = time.time() - t0
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                    exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+        log(f"  wrote {out_path}")
+    return results
+
+
 def _longctx_sweep(model, params, cfg, lengths, batch: int, block_size: int,
                    iters: int, log=print):
     """Per-step decode latency vs cache length: paged flash-decode kernel
@@ -591,7 +758,7 @@ def run(log=print):
 
 
 def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
-             tiers=False, log=print):
+             tiers=False, slo=False, log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
     ragged-length admission-latency / memory-high-water workload;
@@ -599,7 +766,8 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
     untrained weights, attention timing only); ``prefix`` to the
     shared-system-prompt workload (prefix cache on vs off); ``tiers`` to
     the tiered expert-store sweep (untrained weights — stream parity and
-    modeled stall)."""
+    modeled stall); ``slo`` to the open-loop SLO load sweep (untrained
+    weights — preemptive vs FIFO scheduling under Poisson traffic)."""
     from repro.configs import get_reduced
     from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
     from repro.core.tracing import moe_layer_ids
@@ -615,6 +783,9 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
                             out_path=out_path, log=log)
     if tiers:
         return _run_tiers(out_path=out_path, log=log)
+    if slo:
+        return _run_slo(n_requests=16, load_factors=(0.4, 1.5, 4.0),
+                        out_path=out_path, log=log)
     params, _ = train(arch, reduced=True, steps=30, batch_size=8,
                       seq_len=64, lr=3e-3, log=log)
     cfg = get_reduced(arch)
@@ -701,14 +872,22 @@ def main():
                            "capacity sweep (per-tier hit rates, "
                            "stall-by-tier, tok/s) + horizon-aware vs "
                            "fixed-horizon prefetch")
+    mode.add_argument("--slo", action="store_true",
+                      help="open-loop Poisson load sweep: preemptive vs "
+                           "FIFO scheduling — p50/p95/p99 TTFT, "
+                           "goodput-under-SLO, preemption counts, with "
+                           "streams pinned to an uncontended reference")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
     if args.longctx and not args.tiny:
         _run_longctx(lengths=(1024, 4096, 8192, 16384, 32768), iters=3,
                      out_path=args.out)
-    elif args.tiny or args.mixed or args.prefix or args.tiers:
+    elif args.slo and not args.tiny:
+        _run_slo(n_requests=40, load_factors=(0.4, 1.0, 1.5, 2.5, 4.0),
+                 out_path=args.out)
+    elif args.tiny or args.mixed or args.prefix or args.tiers or args.slo:
         run_tiny(args.out, mixed=args.mixed, longctx=args.longctx,
-                 prefix=args.prefix, tiers=args.tiers)
+                 prefix=args.prefix, tiers=args.tiers, slo=args.slo)
     else:
         results = run()
         if args.out:

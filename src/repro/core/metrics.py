@@ -1,6 +1,16 @@
-"""Evaluation metrics (paper §3.2.4): position-wise accuracy (both readings)
-and macro F1 over experts."""
+"""Evaluation metrics: predictor quality (paper §3.2.4) and serving-side
+latency/SLO accounting.
+
+The first half scores expert-activation predictors — position-wise accuracy
+(both readings) and macro F1 over experts. The second half is the serving
+harness's measurement vocabulary: per-request latency records
+(:class:`RequestLatency`), percentile summaries, and goodput-under-SLO
+(:class:`LatencyStats`), consumed by ``serving/scheduler.py`` and reported
+by ``benchmarks/engine_bench.py --slo``."""
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -60,3 +70,165 @@ def prediction_hit_rate(pred_sets, true_sets) -> float:
         hits += sum(1 for e in t if e in ps)
         total += len(t)
     return hits / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving-side latency / SLO metrics
+# ---------------------------------------------------------------------------
+
+def percentile(xs: Iterable[float], q: float) -> float:
+    """Linear-interpolated percentile of ``xs`` (q in [0, 100]); 0.0 for an
+    empty sample so JSON reports stay finite."""
+    xs = list(xs)
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+@dataclass
+class RequestLatency:
+    """One request's wall-clock milestones, recorded by the scheduler.
+
+    All ``*_s`` fields are ``time.perf_counter()`` seconds on the serving
+    host's clock; ``-1.0`` means "never happened".
+
+      * ``rid`` — the engine-assigned request id.
+      * ``priority`` — the request's priority class (lower = more urgent).
+      * ``arrival_s`` — when the request became visible to the scheduler
+        (its workload arrival offset under ``run_workload``, submit time
+        under the closed loop), so TTFT includes queueing delay.
+      * ``first_token_s`` — when the first *sampled* token landed.
+      * ``finish_s`` — when the request retired (or was rejected).
+      * ``tokens_out`` — sampled tokens returned.
+      * ``preemptions`` — times this request was evicted and re-admitted.
+      * ``rejected`` — refused at admission (worst case exceeds the pool);
+        a rejected request can never meet an SLO.
+      * ``slo_ttft_s`` / ``slo_per_token_s`` — the request's latency
+        budgets (None = unconstrained on that axis).
+    """
+    rid: int
+    priority: int = 0
+    arrival_s: float = 0.0
+    first_token_s: float = -1.0
+    finish_s: float = -1.0
+    tokens_out: int = 0
+    preemptions: int = 0
+    rejected: bool = False
+    slo_ttft_s: Optional[float] = None
+    slo_per_token_s: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Arrival-to-first-sampled-token seconds (None if no token)."""
+        if self.first_token_s < 0:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time-per-output-token over the decode tail (None until two
+        sampled tokens exist to measure an interval between)."""
+        if self.tokens_out < 2 or self.first_token_s < 0 or self.finish_s < 0:
+            return None
+        return (self.finish_s - self.first_token_s) / (self.tokens_out - 1)
+
+    @property
+    def has_slo(self) -> bool:
+        return self.slo_ttft_s is not None or self.slo_per_token_s is not None
+
+    @property
+    def slo_met(self) -> bool:
+        """True when the request completed inside every budget it declared
+        (requests with no SLO trivially meet it once they complete)."""
+        if self.rejected:
+            return False
+        if self.slo_ttft_s is not None:
+            if self.ttft_s is None or self.ttft_s > self.slo_ttft_s:
+                return False
+        if self.slo_per_token_s is not None:
+            tpot = self.tpot_s
+            if tpot is not None and tpot > self.slo_per_token_s:
+                return False
+        return True
+
+
+@dataclass
+class LatencyStats:
+    """Aggregate latency/SLO summary of one serving run.
+
+    All ``*_s`` fields are seconds; ``*_rps`` are requests per second of
+    run wall-clock.
+
+      * ``n`` — requests recorded (completed + rejected).
+      * ``completed`` — requests that retired with a result.
+      * ``rejected`` — requests refused at admission.
+      * ``preemptions`` — total evict-and-resume events across requests.
+      * ``ttft_p50_s``/``ttft_p95_s``/``ttft_p99_s`` — arrival-to-first-
+        token percentiles over requests that produced a token.
+      * ``tpot_p50_s``/``tpot_p95_s``/``tpot_p99_s`` — per-output-token
+        latency percentiles over requests with >= 2 sampled tokens.
+      * ``slo_requests`` — how many requests declared any SLO.
+      * ``slo_met`` — how many completed inside all their budgets.
+      * ``slo_attainment`` — ``slo_met / slo_requests`` (1.0 when nothing
+        declared an SLO).
+      * ``throughput_rps`` — completed requests / elapsed.
+      * ``goodput_rps`` — SLO-meeting completed requests / elapsed: the
+        headline "goodput under SLO" an open-loop sweep reports.
+      * ``elapsed_s`` — run wall-clock the rates are normalised by.
+    """
+    n: int = 0
+    completed: int = 0
+    rejected: int = 0
+    preemptions: int = 0
+    ttft_p50_s: float = 0.0
+    ttft_p95_s: float = 0.0
+    ttft_p99_s: float = 0.0
+    tpot_p50_s: float = 0.0
+    tpot_p95_s: float = 0.0
+    tpot_p99_s: float = 0.0
+    slo_requests: int = 0
+    slo_met: int = 0
+    slo_attainment: float = 1.0
+    throughput_rps: float = 0.0
+    goodput_rps: float = 0.0
+    elapsed_s: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        """Plain-float dict (JSON-ready benchmark artifact rows)."""
+        from dataclasses import asdict
+        return {k: (float(v) if isinstance(v, float) else int(v))
+                for k, v in asdict(self).items()}
+
+
+def latency_stats(records: Iterable[RequestLatency],
+                  elapsed_s: float) -> LatencyStats:
+    """Summarise per-request records into a :class:`LatencyStats`.
+
+    ``records`` may be any subset (e.g. one priority class) — the bench
+    calls this per class as well as for the whole run."""
+    recs: List[RequestLatency] = list(records)
+    ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
+    tpots = [r.tpot_s for r in recs if r.tpot_s is not None]
+    completed = [r for r in recs if not r.rejected]
+    with_slo = [r for r in recs if r.has_slo]
+    met = [r for r in recs if r.has_slo and r.slo_met]
+    good = [r for r in completed if r.slo_met]
+    el = max(elapsed_s, 1e-9)
+    return LatencyStats(
+        n=len(recs),
+        completed=len(completed),
+        rejected=len(recs) - len(completed),
+        preemptions=sum(r.preemptions for r in recs),
+        ttft_p50_s=percentile(ttfts, 50),
+        ttft_p95_s=percentile(ttfts, 95),
+        ttft_p99_s=percentile(ttfts, 99),
+        tpot_p50_s=percentile(tpots, 50),
+        tpot_p95_s=percentile(tpots, 95),
+        tpot_p99_s=percentile(tpots, 99),
+        slo_requests=len(with_slo),
+        slo_met=len(met),
+        slo_attainment=(len(met) / len(with_slo)) if with_slo else 1.0,
+        throughput_rps=len(completed) / el,
+        goodput_rps=len(good) / el,
+        elapsed_s=elapsed_s,
+    )

@@ -10,13 +10,27 @@ from dataclasses import dataclass
 from typing import Optional, Union
 
 from repro.serving.expertstore import TierConfig
+from repro.serving.workload import SLO
 
 
 @dataclass(frozen=True)
 class ServeConfig:
     """Knobs for ``BatchedOffloadEngine`` / ``DecodeCore``.
 
-    use_kernel / kernel_backend drive the paged attention read path:
+    Batching & KV paging:
+      * ``max_batch`` — decode lanes (requests) per step; also sizes the
+        scratch row/bucketed jit programs.
+      * ``paged`` — True (default) pages KV into blocks and absorbs
+        prompts via chunked prefill; False keeps the PR-1 contiguous
+        fixed-row engine.
+      * ``block_size`` — token positions per KV block.
+      * ``kv_blocks`` — pool capacity in blocks, *including* the reserved
+        scratch block 0 (None -> worst case: ``max_batch`` full-length
+        requests + scratch). Smaller pools admit by block reservation.
+      * ``prefill_chunk`` — max prompt tokens per chunked-prefill program
+        (clamped so a chunk never pins more than ``capacity`` experts).
+
+    Paged attention read path (``use_kernel`` / ``kernel_backend``):
       * ``use_kernel=False`` — the PR-2 gather route (materialise each
         lane's pages, dense attend): the parity reference / escape hatch.
       * ``use_kernel=True`` (default) — the paged flash-decode kernel.
@@ -25,27 +39,44 @@ class ServeConfig:
         (the lax.scan flash twin), or None to auto-select "tpu" on TPU and
         "jnp" elsewhere.
 
-    prefix_cache turns on prefix sharing (serving/prefixcache.py): common
-    block-aligned prompt prefixes are detected at admission, matched KV
-    blocks are adopted copy-on-write instead of re-prefilled, and the
-    prefix's recorded expert activations are replayed into the policy /
-    ExpertCache. ``prefix_cache_blocks`` soft-caps how many pool blocks the
-    index may keep alive (None -> bounded only by pool pressure; LRU
-    zero-extra-ref prefixes are evicted when admission needs their blocks
-    either way). Needs the chunk-prefill-capable paged engine; stacks with
-    ring/recurrent layers silently keep the cache off.
+    Prefix sharing:
+      * ``prefix_cache`` turns on the radix prefix index
+        (serving/prefixcache.py): common block-aligned prompt prefixes are
+        detected at admission, matched KV blocks are adopted copy-on-write
+        instead of re-prefilled, and the prefix's recorded expert
+        activations are replayed into the policy / ExpertCache. Needs the
+        chunk-prefill-capable paged engine; stacks with ring/recurrent
+        layers silently keep the cache off.
+      * ``prefix_cache_blocks`` soft-caps how many pool blocks the index
+        may keep alive (None -> bounded only by pool pressure; LRU
+        zero-extra-ref prefixes are evicted when admission needs their
+        blocks either way).
 
-    tiers (a :class:`~repro.serving.expertstore.TierConfig`) swaps the
-    single-host expert store for the tiered device/host/peer/disk
-    hierarchy: consistent-hash expert->shard placement, per-tier
-    bandwidth/latency fetch channels, and horizon-aware prefetch whose
-    lookahead depth scales with the tier a predicted expert resides in.
-    ``None`` keeps one host's DRAM holding every expert.
+    Expert storage:
+      * ``tiers`` (a :class:`~repro.serving.expertstore.TierConfig`) swaps
+        the single-host expert store for the tiered device/host/peer/disk
+        hierarchy: consistent-hash expert->shard placement, per-tier
+        bandwidth/latency fetch channels, and horizon-aware prefetch whose
+        lookahead depth scales with the tier a predicted expert resides
+        in. ``None`` keeps one host's DRAM holding every expert.
+      * ``layer_compute_s`` drives the OverlapTracker's modeled compute
+        clock: a float (seconds per layer) is the legacy uniform knob;
+        ``"roofline"`` derives per-layer times from the dry-run's analytic
+        roofline; ``"measured"`` rescales the roofline shape by measured
+        step walltimes.
 
-    layer_compute_s drives the OverlapTracker's modeled compute clock: a
-    float is the legacy uniform knob; ``"roofline"`` derives per-layer
-    times from the dry-run's analytic roofline; ``"measured"`` rescales
-    the roofline shape by measured step walltimes.
+    Scheduling under load (PR 6):
+      * ``preemption`` — allow admission to evict a strictly
+        lower-priority running request (its prompt blocks are published to
+        the prefix index first, so the re-prefill on resume replays as
+        cache hits) when a more urgent request cannot get a lane or a
+        block reservation. Preempted streams stay token-identical to
+        never-preempted runs. Off by default: FIFO block-granular
+        admission, exactly the pre-PR-6 behaviour.
+      * ``default_priority`` — priority for requests that don't specify
+        one (lower = more urgent; only relative order matters).
+      * ``default_slo`` — :class:`~repro.serving.workload.SLO` budgets
+        applied to requests that don't carry their own (None = none).
     """
     max_batch: int = 4
     paged: bool = True
@@ -58,6 +89,9 @@ class ServeConfig:
     prefix_cache_blocks: Optional[int] = None
     tiers: Optional[TierConfig] = None
     layer_compute_s: Union[float, str] = 0.0
+    preemption: bool = False
+    default_priority: int = 0
+    default_slo: Optional[SLO] = None
 
     def resolve_kernel(self) -> Optional[str]:
         """The backend string the engine threads into jitted attention

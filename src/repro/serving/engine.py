@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.metrics import LatencyStats
 from repro.core.policies import PerRequestPolicy, Policy
 from repro.core.tracing import moe_layer_ids
 from repro.models import attention as attn_mod
@@ -86,36 +87,84 @@ def bucket_size(n: int, max_batch: int) -> int:
 
 @dataclass
 class EngineStats:
-    tokens: int = 0                 # all tokens processed (decode + prefill)
+    """Counters every engine accumulates across runs (the latency summary
+    is replaced per run).
+
+    Token & cache traffic:
+      * ``tokens`` — all token positions processed (decode + prefill).
+      * ``hits`` / ``misses`` — ExpertCache residency at access time; an
+        expert needed by several lanes in one step counts once per lane.
+      * ``fetch_bytes`` — bytes moved host->device into expert slots over
+        the engine's lifetime (coalesced re-fetches of an in-flight
+        transfer are NOT re-counted — see ``fetches_deduped``).
+
+    Modeled fetch timeline (seconds of the OverlapTracker's clock):
+      * ``sim_stall_s`` — overlap-aware modeled stall: only the part of
+        each transfer NOT hidden behind credited compute.
+      * ``blocking_stall_s`` — the every-fetch-stalls model (upper bound);
+        with zero credited compute ``sim_stall_s`` degenerates to it.
+      * ``overlapped_s`` — transfer seconds hidden behind compute.
+
+    Step & prefill accounting:
+      * ``steps`` — batched decode steps executed.
+      * ``prefill_tokens`` — prompt tokens absorbed by chunked prefill.
+      * ``prefill_chunks`` — chunked-prefill programs executed.
+      * ``fallback_prefill_tokens`` — prompt tokens that had to stream
+        token-by-token through decode because the stack can't
+        chunk-prefill (ring/recurrent kinds) or paging is off; excludes
+        each prompt's final token (decode runs it on every path to
+        produce the first sampled logits).
+
+    Admission & scheduling:
+      * ``rejected_requests`` — requests refused at admission because
+        their worst case exceeds the whole pool (they retire immediately
+        with an empty result instead of aborting the run).
+      * ``preemptions`` — evict-and-resume events: a running request's KV
+        blocks were released (after publishing to the prefix index) to
+        make room for a more urgent waiter; it re-admits later with its
+        stream intact.
+
+    Tier breakdowns (tiered expert store; single-host engines report
+    everything under tier 1; keys are storage tiers: 1 = local host DRAM,
+    2 = peer-host shard over the interconnect, 3 = disk/mmap):
+      * ``stall_by_tier`` — un-overlapped modeled stall seconds attributed
+        to the tier whose transfer finished last (the critical path).
+      * ``overlapped_by_tier`` — hidden transfer seconds per tier.
+      * ``fetches_by_tier`` / ``fetch_bytes_by_tier`` — fetch counts and
+        bytes served per source tier.
+      * ``deep_prefetch_hits`` — expert uses served by an entry prefetched
+        more than one MoE layer ahead (horizon-aware deep prefetch of
+        slow-tier experts).
+      * ``fetches_deduped`` — re-fetches coalesced onto a transfer already
+        in flight on the same tier channel (the slot was released before
+        the modeled transfer completed, then the key was demanded again):
+        no second transfer is queued and no bytes are re-charged.
+
+    Per-run latency:
+      * ``latency`` — the latest run's :class:`~repro.core.metrics
+        .LatencyStats` (TTFT/per-token percentiles, preemption counts,
+        goodput under SLO), or None before any run completes.
+    """
+    tokens: int = 0
     hits: int = 0
     misses: int = 0
     fetch_bytes: int = 0
-    sim_stall_s: float = 0.0        # overlap-aware modeled stall
-    blocking_stall_s: float = 0.0   # every-fetch-stalls model (upper bound)
-    overlapped_s: float = 0.0       # transfer time hidden behind compute
-    steps: int = 0                  # batched decode steps executed
-    prefill_tokens: int = 0         # prompt tokens absorbed by chunked prefill
-    prefill_chunks: int = 0         # chunked-prefill steps executed
-    # prompt tokens that had to stream token-by-token through decode because
-    # the stack can't chunk-prefill (ring/recurrent kinds) or paging is off —
-    # the measurable size of the ROADMAP "chunked prefill for ring/recurrent
-    # kinds" gap. Excludes each prompt's final token (decode must run it to
-    # produce the first sampled logits on every path).
+    sim_stall_s: float = 0.0
+    blocking_stall_s: float = 0.0
+    overlapped_s: float = 0.0
+    steps: int = 0
+    prefill_tokens: int = 0
+    prefill_chunks: int = 0
     fallback_prefill_tokens: int = 0
-    # requests refused at admission because their worst case exceeds the
-    # whole pool (they retire immediately with an empty result instead of
-    # aborting the run)
     rejected_requests: int = 0
-    # --- tier breakdowns (tiered expert store; single-host engines report
-    # everything under tier 1). Keys are storage tiers: 1 = local host
-    # DRAM, 2 = peer-host shard over the interconnect, 3 = disk/mmap.
+    preemptions: int = 0
     stall_by_tier: Dict[int, float] = field(default_factory=dict)
     overlapped_by_tier: Dict[int, float] = field(default_factory=dict)
     fetches_by_tier: Dict[int, int] = field(default_factory=dict)
     fetch_bytes_by_tier: Dict[int, int] = field(default_factory=dict)
-    # expert uses served by an entry prefetched >1 MoE layer ahead (the
-    # horizon-aware deep prefetch of slow-tier experts)
     deep_prefetch_hits: int = 0
+    fetches_deduped: int = 0
+    latency: Optional[LatencyStats] = None
 
     @property
     def hit_rate(self):
@@ -466,6 +515,7 @@ class DecodeCore:
         self.stats.stall_by_tier = dict(self.tracker.stall_by_tier)
         self.stats.overlapped_by_tier = dict(self.tracker.overlapped_by_tier)
         self.stats.deep_prefetch_hits = self.cache.stats.deep_prefetch_hits
+        self.stats.fetches_deduped = self.tracker.fetches_deduped
         st = getattr(self.store, "stats", None)
         if st is not None:
             self.stats.fetches_by_tier = dict(st.fetches_by_tier)

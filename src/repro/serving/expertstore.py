@@ -60,24 +60,36 @@ from repro.serving.offload import (TIER_DISK, TIER_HOST, TIER_PEER,
 class TierConfig:
     """Shard/tier knobs for :class:`TieredExpertStore`.
 
-    ``num_shards`` hosts share the expert set (shard ``local_shard`` is the
-    serving process). ``shard_dram_experts`` caps how many home experts a
-    shard keeps in DRAM — the rest spill to disk (tier 3). ``cache_experts``
-    sizes the local tier-1 LRU cache of promoted peer/disk experts.
-    ``horizons[t]`` is how many MoE layers ahead a tier-``t`` expert is
-    prefetched; the default scales lookahead with tier depth, ``(1, 1, 1,
-    1)`` is the fixed-horizon baseline the benchmark compares against.
+      * ``num_shards`` — hosts sharing the expert set over the consistent-
+        hash ring.
+      * ``local_shard`` — which shard id is the serving process.
+      * ``shard_dram_experts`` — cap on home experts a shard keeps in DRAM;
+        the overflow spills to disk (tier 3). ``None`` disables spill.
+      * ``cache_experts`` — slots in the local tier-1 LRU cache of promoted
+        peer/disk experts (0 disables promotion caching).
+      * ``host_bw`` — tier-1 host-to-device bandwidth, bytes/s.
+      * ``peer_bw`` / ``peer_latency_s`` — tier-2 interconnect bandwidth
+        (bytes/s) and per-fetch latency (seconds).
+      * ``disk_bw`` / ``disk_latency_s`` — tier-3 read bandwidth (bytes/s)
+        and per-fetch latency (seconds).
+      * ``vnodes`` — virtual nodes each shard contributes to the hash ring
+        (placement smoothness vs ring size).
+      * ``seed`` — ring hash seed (placement is deterministic in it).
+      * ``horizons`` — ``horizons[t]`` is how many MoE layers ahead a
+        tier-``t`` expert is prefetched; the default scales lookahead with
+        tier depth and ``(1, 1, 1, 1)`` is the fixed-horizon baseline the
+        benchmark compares against.
     """
     num_shards: int = 1
     local_shard: int = 0
-    shard_dram_experts: Optional[int] = None   # None -> no disk spill
-    cache_experts: int = 0                     # tier-1 cache slots
-    host_bw: float = 100e9                     # tier-1 B/s (host -> device)
-    peer_bw: float = 25e9                      # tier-2 B/s (interconnect)
+    shard_dram_experts: Optional[int] = None
+    cache_experts: int = 0
+    host_bw: float = 100e9
+    peer_bw: float = 25e9
     peer_latency_s: float = 20e-6
-    disk_bw: float = 3e9                       # tier-3 B/s (SSD read)
+    disk_bw: float = 3e9
     disk_latency_s: float = 100e-6
-    vnodes: int = 64                           # ring virtual nodes per shard
+    vnodes: int = 64
     seed: int = 0
     horizons: Tuple[int, int, int, int] = (1, 1, 2, 3)
 

@@ -45,14 +45,33 @@ class PoolStats:
 
       ``allocs - releases  == blocks currently allocated``
       ``allocs + retains - ref_drops == sum of current refcounts``
+
+    All counters are block *events* since pool construction:
+
+      * ``allocs`` — blocks handed out (each starts at refcount 1).
+      * ``retains`` — extra references taken (prefix sharing / adoption).
+      * ``ref_drops`` — ``free()`` calls: references dropped.
+      * ``releases`` — blocks actually returned to the free list (the
+        refcount-zero subset of ``ref_drops``).
+      * ``cow_copies`` — shared blocks privatised before a write
+        (copy-on-write swaps).
+      * ``failed_reserves`` — admission attempts refused for lack of
+        blocks (the request waits or triggers prefix eviction /
+        preemption).
+      * ``preempt_ref_drops`` — references dropped by preemption: a
+        victim's table released mid-request to re-admit later (its
+        index-retained blocks survive — only the table's references go).
+      * ``high_water`` — max blocks simultaneously in use (sizes
+        ``kv_high_water_bytes``).
     """
     allocs: int = 0
-    retains: int = 0             # extra references taken (prefix sharing)
-    ref_drops: int = 0           # free() calls: references dropped
-    releases: int = 0            # blocks actually returned to the free list
-    cow_copies: int = 0          # shared blocks privatised before a write
-    failed_reserves: int = 0     # admission attempts refused for lack of blocks
-    high_water: int = 0          # max blocks simultaneously in use
+    retains: int = 0
+    ref_drops: int = 0
+    releases: int = 0
+    cow_copies: int = 0
+    failed_reserves: int = 0
+    preempt_ref_drops: int = 0
+    high_water: int = 0
 
     @property
     def frees(self) -> int:

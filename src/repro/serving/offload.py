@@ -122,6 +122,14 @@ class OverlapTracker:
 
     The single-tier default (every ``submit`` at tier 1, duration from
     ``host_bw``) reproduces the original one-serial-channel model exactly.
+
+    Identical pending keys coalesce: when a key is re-submitted while its
+    previous transfer is still on the wire (the slot was dropped before
+    the modeled completion, then the key was demanded again), the new
+    request rides the in-flight transfer instead of queueing a second
+    serial one — unless a fresh fetch would land *earlier* (the store may
+    now serve the key from a faster tier), in which case the fresh fetch
+    wins. ``fetches_deduped`` counts the coalesced submissions.
     """
 
     def __init__(self, host_bw: float = 100e9):
@@ -131,6 +139,11 @@ class OverlapTracker:
         self.pending: Dict[Key, float] = {}   # key -> modeled completion time
         self._dur: Dict[Key, float] = {}      # key -> transfer duration
         self._tier: Dict[Key, int] = {}       # key -> submitting tier
+        # key -> (completion, duration, tier) of the latest transfer put on
+        # the wire, surviving ``drop``: bytes in flight don't vanish when
+        # their slot is released, so a re-submit can ride them
+        self._wire: Dict[Key, Tuple[float, float, int]] = {}
+        self.fetches_deduped = 0
         self.stall_s = 0.0
         self.overlapped_s = 0.0               # transfer time hidden by compute
         self.stall_by_tier: Dict[int, float] = {}
@@ -143,16 +156,39 @@ class OverlapTracker:
         return max(self._channel_free.values(), default=0.0)
 
     def submit(self, key: Key, nbytes: int, tier: int = TIER_HOST,
-               duration: Optional[float] = None) -> None:
+               duration: Optional[float] = None) -> bool:
+        """Queue a transfer for ``key``; returns True when it coalesced
+        onto an identical transfer already in flight (no new channel time
+        or bytes charged)."""
         dur = nbytes / self.host_bw if duration is None else duration
-        start = max(self.clock, self._channel_free.get(tier, 0.0))
-        self._channel_free[tier] = start + dur
-        self.pending[key] = start + dur
+        if len(self._wire) > 4 * (len(self.pending) + 8):
+            self._prune_wire()
+        wire = self._wire.get(key)
+        fresh = max(self.clock, self._channel_free.get(tier, 0.0)) + dur
+        if wire is not None and self.clock < wire[0] <= fresh:
+            # same bytes already on the wire and landing no later than a
+            # fresh fetch would: ride them
+            self.pending[key] = wire[0]
+            self._dur[key] = wire[1]
+            self._tier[key] = wire[2]
+            self.fetches_deduped += 1
+            return True
+        self._channel_free[tier] = fresh
+        self.pending[key] = fresh
         self._dur[key] = dur
         self._tier[key] = tier
+        self._wire[key] = (fresh, dur, tier)
+        return False
+
+    def _prune_wire(self) -> None:
+        """Drop wire records of transfers that have already landed."""
+        self._wire = {k: v for k, v in self._wire.items()
+                      if v[0] > self.clock}
 
     def drop(self, key: Key) -> None:
-        """Forget a pending transfer (its slot was released before use)."""
+        """Forget a pending transfer (its slot was released before use).
+        The wire record survives: the bytes are still in flight and a
+        re-submit may coalesce onto them."""
         self.pending.pop(key, None)
         self._dur.pop(key, None)
         self._tier.pop(key, None)
@@ -217,6 +253,7 @@ class SlotBuffer:
         self._free = list(range(n_slots))
         self.fetch_bytes = 0
         self.fetch_count = 0
+        self.fetches_deduped = 0     # fills that rode an in-flight transfer
         self.sim_fetch_s = 0.0       # blocking model: every fetch stalls
 
     # --- control-plane callbacks wired into ExpertCache -------------------
@@ -237,11 +274,21 @@ class SlotBuffer:
         nbytes = wg.nbytes + wu.nbytes + wd.nbytes
         dur = (info.duration if info.duration is not None
                else nbytes / self.host_bw)
-        self.fetch_bytes += nbytes
-        self.fetch_count += 1
-        self.sim_fetch_s += dur      # blocking model: every fetch stalls
+        coalesced = False
         if self.tracker is not None:
-            self.tracker.submit(key, nbytes, tier=info.tier, duration=dur)
+            coalesced = self.tracker.submit(key, nbytes, tier=info.tier,
+                                            duration=dur)
+        if coalesced:
+            # the key's bytes were already in flight on this tier's channel
+            # (slot released before the modeled transfer completed): no new
+            # traffic is charged
+            self.fetches_deduped += 1
+        else:
+            self.fetch_bytes += nbytes
+            self.fetch_count += 1
+        # the blocking model has no in-flight transfers to ride, so every
+        # fetch stalls fully — keep it the upper bound
+        self.sim_fetch_s += dur
 
     def gather(self, keys) -> tuple:
         """Return (k, ...) stacked expert weights for resident keys."""

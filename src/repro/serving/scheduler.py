@@ -27,24 +27,40 @@ and requests still mid-prefill adopt blocks a sibling publishes at every
 chunk boundary — so even a same-wave burst of identical system prompts
 prefills the shared prefix exactly once.
 
+Scheduling under load: requests carry a priority (lower = more urgent) and
+optional SLO budgets (serving/workload.py), the queue admits in priority
+order (FIFO within a class), and with ``ServeConfig.preemption`` admission
+may evict a strictly lower-priority running request when a more urgent
+waiter can't get a lane or a block reservation. A preempted request's
+prompt blocks are published to the prefix index *before* its table is
+released, its sampled tail is folded into the teacher-forced prompt, and
+the re-admission replays the folded prompt — through the prefix index as
+cache hits when it's on — reproducing the identical token stream.
+``run_workload`` replays an open-loop workload against the real clock and
+``EngineStats.latency`` summarises TTFT/per-token percentiles, preemption
+counts, and goodput under SLO.
+
 Per-request token streams are identical to the batch-1 ``OffloadEngine``
 — tests pin paged-vs-batch-1 parity across ragged prompt lengths, with the
-prefix cache on and off.
+prefix cache on and off, and across forced preemption storms.
 """
 from __future__ import annotations
 
+import heapq
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.metrics import RequestLatency, latency_stats
 from repro.core.policies import PerRequestPolicy, Policy
 from repro.serving.config import ServeConfig
 from repro.serving.engine import DecodeCore, EngineStats, sample_token
 from repro.serving.kvpool import BlockTable, KVBlockPool, blocks_for
 from repro.serving.prefixcache import PrefixCache, PrefixMatch
+from repro.serving.workload import SLO, WorkloadRequest
 
 
 @dataclass
@@ -54,6 +70,8 @@ class Request:
     max_new: int
     temperature: float = 0.0
     seed: int = 0
+    priority: int = 0          # lower = more urgent
+    slo: Optional[SLO] = None  # per-request latency budgets
     # runtime state
     t: int = 0                 # decode steps completed == position
     cur: int = 0               # token to feed on the next step
@@ -63,19 +81,31 @@ class Request:
     rng: Optional[np.random.Generator] = None
     table: Optional[BlockTable] = None
     lane: int = -1             # row for bounded per-row state
+    seq: int = -1              # admission-order tiebreak within a priority
+    arrival_s: float = 0.0     # perf_counter when request became visible
     admit_s: float = 0.0       # perf_counter at admission
     first_token_s: float = -1.0  # perf_counter at first sampled token
+    preemptions: int = 0       # times evicted and re-admitted
+    base_len: int = 0          # original prompt length (pre-fold)
     # per-block expert activations observed while processing prompt
     # positions (block index -> MoE-layer ordinal -> expert ids) — what the
     # prefix cache stores for activation replay on a future hit
     block_experts: Dict[int, Dict[int, set]] = field(default_factory=dict)
 
+    def __post_init__(self):
+        self.base_len = len(self.prompt)
+
     def start(self, cache_len: int) -> None:
+        """(Re)enter a lane. The first admission seeds the RNG; a resume
+        after preemption keeps ``generated``/``rng`` intact so replaying
+        the folded prompt (original prompt + sampled tail) reproduces the
+        identical stream — teacher-forced positions never consume the RNG.
+        """
         self.t = 0
         self.cur = int(self.prompt[0])
-        self.n_total = min(len(self.prompt) + self.max_new, cache_len)
-        self.generated = []
-        self.rng = np.random.default_rng(self.seed)
+        self.n_total = min(self.base_len + self.max_new, cache_len)
+        if self.rng is None:
+            self.rng = np.random.default_rng(self.seed)
 
     def feed_result(self, logits: np.ndarray) -> None:
         """Consume one step's logits; mirrors OffloadEngine.generate."""
@@ -177,9 +207,17 @@ class BatchedOffloadEngine:
         self.prefix_cache_blocks = serve.prefix_cache_blocks
         self.prefix: Optional[PrefixCache] = None   # built per run
         self.kv_block_bytes = 0          # device bytes per block, set by run
+        # preemption needs block tables to evict and the prefix index flow
+        # to make resume cheap; the contiguous row path stays FIFO-only
+        self.preemption = serve.preemption and self.paged
         self._policy = None if policy is None else PerRequestPolicy(policy)
-        self._queue: deque[Request] = deque()
+        # min-heap of (priority, seq, Request): priority order, FIFO within
+        # a class; a preempted victim re-enters with its original seq so it
+        # goes back to the front of its class
+        self._queue: List[Tuple[int, int, Request]] = []
+        self._seq = 0
         self._ttft: Dict[int, float] = {}
+        self._records: Dict[int, RequestLatency] = {}
         self._next_rid = 0
 
     @property
@@ -196,6 +234,25 @@ class BatchedOffloadEngine:
         if req.first_token_s >= 0:
             self._ttft[req.rid] = req.first_token_s - req.admit_s
 
+    def _finish_record(self, req: Request, rejected: bool = False) -> None:
+        """Write the request's RequestLatency row (retire or reject)."""
+        self._records[req.rid] = RequestLatency(
+            rid=req.rid, priority=req.priority, arrival_s=req.arrival_s,
+            first_token_s=req.first_token_s,
+            finish_s=time.perf_counter(),
+            tokens_out=len(req.generated),
+            preemptions=req.preemptions,
+            rejected=rejected,
+            slo_ttft_s=req.slo.ttft_s if req.slo is not None else None,
+            slo_per_token_s=(req.slo.per_token_s
+                             if req.slo is not None else None))
+
+    def records(self) -> Dict[int, RequestLatency]:
+        """Per-request latency records of the latest run (rid -> record);
+        feed subsets to :func:`repro.core.metrics.latency_stats` for e.g.
+        per-priority-class breakdowns."""
+        return dict(self._records)
+
     @property
     def kv_high_water_bytes(self) -> int:
         """Peak *logical* KV working set (blocks in use × bytes/block).
@@ -209,8 +266,10 @@ class BatchedOffloadEngine:
         return self.pool.stats.high_water * self.kv_block_bytes
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new: int,
-               temperature: float = 0.0, seed: int = 0) -> int:
+    def _make_request(self, prompt: Sequence[int], max_new: int,
+                      temperature: float, seed: int,
+                      priority: Optional[int],
+                      slo: Optional[SLO]) -> Request:
         prompt = [int(p) for p in prompt]
         if not prompt:
             raise ValueError(
@@ -220,14 +279,66 @@ class BatchedOffloadEngine:
             raise ValueError(f"max_new must be >= 0, got {max_new}")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, prompt, max_new, temperature, seed))
-        return rid
+        return Request(rid, prompt, max_new, temperature, seed,
+                       priority=(self.serve.default_priority
+                                 if priority is None else int(priority)),
+                       slo=self.serve.default_slo if slo is None else slo,
+                       arrival_s=time.perf_counter())
+
+    def _push(self, req: Request) -> None:
+        if req.seq < 0:
+            req.seq = self._seq
+            self._seq += 1
+        heapq.heappush(self._queue, (req.priority, req.seq, req))
+
+    def _pop_next(self) -> Request:
+        return heapq.heappop(self._queue)[2]
+
+    def submit(self, prompt: Sequence[int], max_new: int,
+               temperature: float = 0.0, seed: int = 0,
+               priority: Optional[int] = None,
+               slo: Optional[SLO] = None) -> int:
+        """Enqueue a request; returns its rid. ``priority`` (lower = more
+        urgent) and ``slo`` default to the ServeConfig's
+        ``default_priority``/``default_slo``."""
+        req = self._make_request(prompt, max_new, temperature, seed,
+                                 priority, slo)
+        self._push(req)
+        return req.rid
 
     def run(self, cache_len: int) -> Dict[int, List[int]]:
         self._ttft.clear()             # ttft() reports the latest run only
+        self._records = {}
+        t0 = time.perf_counter()
         if self.paged:
-            return self._run_paged(cache_len)
-        return self._run_rows(cache_len)
+            results = self._run_paged(cache_len)
+        else:
+            results = self._run_rows(cache_len)
+        self.core.stats.latency = latency_stats(
+            self._records.values(), time.perf_counter() - t0)
+        return results
+
+    def run_workload(self, workload: Sequence[WorkloadRequest],
+                     cache_len: int) -> Dict[int, List[int]]:
+        """Open-loop replay: each :class:`WorkloadRequest` becomes visible
+        to the scheduler at its ``arrival_s`` offset from the start of the
+        call (the engine never waits for the generator, so queueing delay
+        is measured rather than hidden). Returns ``{rid: generated}`` with
+        rids assigned in arrival order; ``stats.latency`` summarises the
+        run. Needs the paged engine."""
+        if not self.paged:
+            raise ValueError("run_workload needs the paged engine "
+                             "(ServeConfig.paged=True)")
+        if self._queue:
+            raise RuntimeError("run_workload with requests already queued")
+        self._ttft.clear()
+        self._records = {}
+        arrivals = deque(sorted(workload, key=lambda r: r.arrival_s))
+        t0 = time.perf_counter()
+        results = self._run_paged(cache_len, arrivals=arrivals, t0=t0)
+        self.core.stats.latency = latency_stats(
+            self._records.values(), time.perf_counter() - t0)
+        return results
 
     # ------------------------------------------------------------------
     def _run_rows(self, cache_len: int) -> Dict[int, List[int]]:
@@ -239,7 +350,7 @@ class BatchedOffloadEngine:
         while self._queue or any(r is not None for r in rows):
             for s in range(self.max_batch):          # admission
                 while rows[s] is None and self._queue:
-                    req = self._queue.popleft()
+                    req = self._pop_next()
                     req.start(cache_len)
                     req.admit_s = time.perf_counter()
                     if req.done:
@@ -248,6 +359,7 @@ class BatchedOffloadEngine:
                         # engine's immediate-retire behavior
                         results[req.rid] = req.generated
                         self._record_ttft(req)
+                        self._finish_record(req)
                         continue
                     rows[s] = req
                     if self._policy is not None:
@@ -268,6 +380,7 @@ class BatchedOffloadEngine:
                 if r.done:
                     results[r.rid] = r.generated
                     self._record_ttft(r)
+                    self._finish_record(r)
                     rows[s] = None
                     if self._policy is not None:
                         self._policy.end_request(r.rid)
@@ -276,8 +389,9 @@ class BatchedOffloadEngine:
     # ------------------------------------------------------------------
     def _admit_paged(self, lanes: List[Optional[Request]], cache_len: int,
                      results: Dict[int, List[int]]) -> None:
-        """Admit while a lane is free AND the pool can reserve the request's
-        worst-case block count — block-granular admission, no preemption.
+        """Admit the most urgent waiter while a lane is free AND the pool
+        can reserve its worst-case block count — block-granular admission,
+        priority order (FIFO within a class).
 
         With the prefix cache on, admission first walks the radix index:
         matched blocks are adopted (retained, copy-on-write) instead of
@@ -285,44 +399,55 @@ class BatchedOffloadEngine:
         and the prefix's recorded expert activations are replayed. A
         request whose worst case exceeds the *whole* pool is rejected
         gracefully (empty result + ``EngineStats.rejected_requests``)
-        rather than aborting the run with lanes held and blocks leaked."""
+        rather than aborting the run with lanes held and blocks leaked.
+
+        With ``ServeConfig.preemption``, a waiter that can't get a lane or
+        a reservation may evict a strictly lower-priority running request
+        (``_preempt``): the victim's blocks return to the pool (published
+        to the prefix index first) and admission retries with a fresh
+        prefix match."""
         bs = self.block_size
-        for lane in range(self.max_batch):
-            while lanes[lane] is None and self._queue:
-                req = self._queue[0]
-                n_total = min(len(req.prompt) + req.max_new, cache_len)
-                # the request must process at least the position whose
-                # logits seed sampling, so a match may cover at most
-                # min(len(prompt), n_total) - 1 positions
-                match = (self.prefix.match(req.prompt,
-                                           min(len(req.prompt), n_total) - 1)
-                         if self.prefix is not None else PrefixMatch())
-                # a match ending mid-block COWs that block on first write:
-                # one extra allocation beyond the unmatched remainder
-                need = (blocks_for(n_total, bs) - len(match.bids)
-                        + (1 if match.tokens % bs else 0))
-                if blocks_for(n_total, bs) > self.pool.num_blocks - 1:
-                    # the FULL footprint is what must fit live (matched
-                    # blocks stay allocated too): reject on it, not on the
-                    # match-reduced reservation, or an impossible request
-                    # would first wipe the index via the fallback below
-                    self._queue.popleft()            # reject, keep running
-                    results[req.rid] = []
-                    self.core.stats.rejected_requests += 1
-                    continue
-                if not self.pool.try_reserve(need):
-                    # pool pressure may be cached prefixes nobody holds —
-                    # evict zero-extra-ref LRU prefixes (NOT the blocks we
-                    # just matched: until adopted, the index's reference is
-                    # their only one, so eviction would free them out from
-                    # under the pending adopt) and retry
-                    if self.prefix is None:
-                        return                       # FIFO: don't starve
+        while self._queue:
+            req = self._queue[0][2]            # most urgent waiter
+            lane = next((i for i, r in enumerate(lanes) if r is None), None)
+            if lane is None:
+                if not self._try_preempt(lanes, req):
+                    return                     # every lane is busy
+                continue                       # a lane is free now
+            n_total = min(req.base_len + req.max_new, cache_len)
+            # the request must process at least the position whose
+            # logits seed sampling, so a match may cover at most
+            # min(len(prompt), n_total) - 1 positions
+            match = (self.prefix.match(req.prompt,
+                                       min(len(req.prompt), n_total) - 1)
+                     if self.prefix is not None else PrefixMatch())
+            # a match ending mid-block COWs that block on first write:
+            # one extra allocation beyond the unmatched remainder
+            need = (blocks_for(n_total, bs) - len(match.bids)
+                    + (1 if match.tokens % bs else 0))
+            if blocks_for(n_total, bs) > self.pool.num_blocks - 1:
+                # the FULL footprint is what must fit live (matched
+                # blocks stay allocated too): reject on it, not on the
+                # match-reduced reservation, or an impossible request
+                # would first wipe the index via the fallback below
+                self._pop_next()               # reject, keep running
+                results[req.rid] = []
+                self.core.stats.rejected_requests += 1
+                self._finish_record(req, rejected=True)
+                continue
+            if not self.pool.try_reserve(need):
+                # pool pressure may be cached prefixes nobody holds —
+                # evict zero-extra-ref LRU prefixes (NOT the blocks we
+                # just matched: until adopted, the index's reference is
+                # their only one, so eviction would free them out from
+                # under the pending adopt) and retry
+                reserved = False
+                if self.prefix is not None:
                     self.prefix.evict(need - self.pool.available,
                                       exclude=match.bids)
-                    if not self.pool.try_reserve(need):
-                        if not match:
-                            return
+                    if self.pool.try_reserve(need):
+                        reserved = True
+                    elif match:
                         # the protected match itself may BE the pressure:
                         # give it up and admit as a plain full-prefill
                         # request (guaranteed to fit once lanes drain —
@@ -330,35 +455,87 @@ class BatchedOffloadEngine:
                         match = PrefixMatch()
                         need = blocks_for(n_total, bs)
                         self.prefix.evict(need - self.pool.available)
-                        if not self.pool.try_reserve(need):
-                            return
-                self._queue.popleft()
-                req.start(cache_len)
+                        reserved = self.pool.try_reserve(need)
+                if not reserved:
+                    if not self._try_preempt(lanes, req):
+                        return                 # FIFO within class: wait
+                    continue                   # blocks freed: re-match
+            self._pop_next()
+            req.start(cache_len)
+            if req.admit_s == 0.0:         # resumes keep the first admission
                 req.admit_s = time.perf_counter()
-                req.table = BlockTable(self.pool, need)
-                req.lane = lane
-                if self._policy is not None:
-                    self._policy.begin_request(req.rid)
-                if match:
-                    req.table.adopt(match.bids)
-                    req.t = match.tokens             # prefill starts here
-                    self.prefix.stats.hits += 1
-                    self.prefix.stats.hit_tokens += match.tokens
-                    self._replay(req, match.experts)
-                elif self.prefix is not None:
-                    self.prefix.stats.misses += 1
-                # positions a prefill program may absorb: everything up to
-                # (not including) the position whose logits the first
-                # sample needs
-                req.prefill_end = (min(len(req.prompt) - 1, req.n_total)
-                                   if self.core.chunk_prefill_ok else 0)
-                lanes[lane] = req
-                if req.done:
-                    # degenerate: cache_len admits zero steps
-                    self._retire(lanes, req, results)
-                elif not req.prefilling and req.t > 0:
-                    # full-prefix hit: go straight to decoding the tail
-                    req.cur = int(req.prompt[req.t])
+            req.table = BlockTable(self.pool, need)
+            req.lane = lane
+            if self._policy is not None:
+                self._policy.begin_request(req.rid)
+            if match:
+                req.table.adopt(match.bids)
+                req.t = match.tokens             # prefill starts here
+                self.prefix.stats.hits += 1
+                self.prefix.stats.hit_tokens += match.tokens
+                self._replay(req, match.experts)
+            elif self.prefix is not None:
+                self.prefix.stats.misses += 1
+            # positions a prefill program may absorb: everything up to
+            # (not including) the position whose logits the first
+            # sample needs
+            req.prefill_end = (min(len(req.prompt) - 1, req.n_total)
+                               if self.core.chunk_prefill_ok else 0)
+            lanes[lane] = req
+            if req.done:
+                # degenerate: cache_len admits zero steps
+                self._retire(lanes, req, results)
+            elif not req.prefilling and req.t > 0:
+                # full-prefix hit: go straight to decoding the tail
+                req.cur = int(req.prompt[req.t])
+
+    # -- preemption ----------------------------------------------------
+    def _try_preempt(self, lanes: List[Optional[Request]],
+                     waiter: Request) -> bool:
+        """Evict the least-urgent running request strictly below the
+        waiter's priority (ties broken toward the most recently admitted —
+        least progress lost). Returns True when a victim was preempted;
+        strict inequality prevents same-priority ping-pong."""
+        if not self.preemption:
+            return False
+        victims = [r for r in lanes
+                   if r is not None and r.priority > waiter.priority]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: (r.priority, r.admit_s))
+        self._preempt(lanes, victim)
+        return True
+
+    def _preempt(self, lanes: List[Optional[Request]],
+                 victim: Request) -> None:
+        """Evict ``victim`` from its lane and re-queue it for later.
+
+        The sampled tail is folded into the teacher-forced prompt —
+        position p of the resumed request replays ``prompt[p]`` for
+        p < base_len and ``generated[p - base_len]`` after, and teacher-
+        forced positions never consume the RNG, so the resumed stream is
+        token-identical to a never-preempted run. The victim's completed
+        prompt blocks are published to the prefix index *before* its table
+        is released (the index's retains keep them alive), so with the
+        prefix cache on the re-prefill replays as cache hits."""
+        victim.prompt = (list(victim.prompt[:victim.base_len])
+                         + victim.generated)
+        self._insert_prefix(victim)    # publish before release: resume hits
+        self.pool.stats.preempt_ref_drops += len(victim.table.ids)
+        victim.table.release()
+        victim.table = None
+        if self.prefix is not None:
+            self.prefix.enforce_cap()
+        lanes[victim.lane] = None
+        victim.lane = -1
+        victim.preemptions += 1
+        self.core.stats.preemptions += 1
+        if self._policy is not None:
+            # the per-request predictor restarts on resume; the prefix
+            # index's recorded activations are replayed into the fresh
+            # instance at re-admission
+            self._policy.end_request(victim.rid)
+        self._push(victim)             # original seq: front of its class
 
     def _count_fallback(self, active) -> None:
         """Prompt tokens fed through a decode step that chunked prefill
@@ -371,6 +548,7 @@ class BatchedOffloadEngine:
     def _retire(self, lanes, req: Request, results) -> None:
         results[req.rid] = req.generated
         self._record_ttft(req)
+        self._finish_record(req)
         self._insert_prefix(req)         # index prompt blocks before release
         req.table.release()
         if self.prefix is not None:
@@ -460,7 +638,21 @@ class BatchedOffloadEngine:
                     caches = self.core.copy_block(caches, swap[0], swap[1])
         return caches
 
-    def _run_paged(self, cache_len: int) -> Dict[int, List[int]]:
+    def _admit_arrivals(self, arrivals: deque, t0: float) -> None:
+        """Move workload requests whose arrival offset has passed into the
+        scheduler queue; their TTFT clock starts at the *scheduled*
+        arrival, so any backlog shows up as queueing delay."""
+        now = time.perf_counter() - t0
+        while arrivals and arrivals[0].arrival_s <= now:
+            wr = arrivals.popleft()
+            req = self._make_request(wr.prompt, wr.max_new, wr.temperature,
+                                     wr.seed, wr.priority, wr.slo)
+            req.arrival_s = t0 + wr.arrival_s
+            self._push(req)
+
+    def _run_paged(self, cache_len: int,
+                   arrivals: Optional[deque] = None,
+                   t0: float = 0.0) -> Dict[int, List[int]]:
         bs = self.block_size
         table_width = blocks_for(cache_len, bs)
         num_blocks = (self.kv_blocks if self.kv_blocks is not None
@@ -477,7 +669,18 @@ class BatchedOffloadEngine:
         lanes: List[Optional[Request]] = [None] * self.max_batch
         results: Dict[int, List[int]] = {}
 
-        while self._queue or any(r is not None for r in lanes):
+        while self._queue or arrivals or any(r is not None for r in lanes):
+            if arrivals:
+                self._admit_arrivals(arrivals, t0)
+                if not self._queue and not any(r is not None for r in lanes):
+                    # idle until the next arrival: sleep briefly instead of
+                    # spinning (open loop — the clock keeps running)
+                    if arrivals:
+                        gap = arrivals[0].arrival_s - (
+                            time.perf_counter() - t0)
+                        if gap > 0:
+                            time.sleep(min(gap, 0.002))
+                    continue
             self._admit_paged(lanes, cache_len, results)
 
             # one prefill chunk per prefilling request, interleaved with the

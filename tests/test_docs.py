@@ -1,0 +1,25 @@
+"""Tier-1 hook for the docs lint: config/stats docstring coverage and
+markdown link integrity (the same checks CI runs via
+``tools/check_docs.py``)."""
+import os
+import sys
+
+TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools")
+
+
+def _checker():
+    sys.path.insert(0, TOOLS)
+    try:
+        import check_docs
+    finally:
+        sys.path.remove(TOOLS)
+    return check_docs
+
+
+def test_dataclass_fields_documented():
+    assert _checker().check_docstrings() == []
+
+
+def test_markdown_links_resolve():
+    assert _checker().check_markdown() == []

@@ -1,0 +1,218 @@
+"""Units for the open-loop traffic layer: workload generators, latency
+summaries, and in-flight fetch coalescing on the modeled transfer
+timeline."""
+import pytest
+
+from repro.core.metrics import (RequestLatency, latency_stats, percentile)
+from repro.serving.offload import (TIER_DISK, TIER_HOST, HostExpertStore,
+                                   OverlapTracker, make_offload_cache)
+from repro.serving.workload import (SLO, PriorityClass, WorkloadRequest,
+                                    poisson_workload, scale_rate,
+                                    trace_workload)
+
+# ---------------------------------------------------------------------------
+# workload generators
+
+
+CLASSES = (
+    PriorityClass("interactive", priority=0, weight=1.0, prompt_len=(2, 6),
+                  max_new=4, slo=SLO(ttft_s=0.1), temperature=0.0),
+    PriorityClass("batch", priority=2, weight=3.0, prompt_len=16,
+                  max_new=(8, 12), slo=None),
+)
+
+
+def test_poisson_workload_deterministic():
+    a = poisson_workload(32, 5.0, CLASSES, vocab_size=64, seed=3)
+    b = poisson_workload(32, 5.0, CLASSES, vocab_size=64, seed=3)
+    assert a == b
+    c = poisson_workload(32, 5.0, CLASSES, vocab_size=64, seed=4)
+    assert a != c
+
+
+def test_poisson_workload_shape():
+    wl = poisson_workload(64, 10.0, CLASSES, vocab_size=64, seed=1)
+    assert len(wl) == 64
+    arrivals = [r.arrival_s for r in wl]
+    assert arrivals == sorted(arrivals)
+    assert all(r.arrival_s > 0 for r in wl)
+    assert len({r.seed for r in wl}) == 64          # private per-request rng
+    for r in wl:
+        assert all(0 <= t < 64 for t in r.prompt)
+        if r.cls == "interactive":
+            assert r.priority == 0 and 2 <= len(r.prompt) <= 6
+            assert r.max_new == 4 and r.slo == SLO(ttft_s=0.1)
+        else:
+            assert r.priority == 2 and len(r.prompt) == 16
+            assert 8 <= r.max_new <= 12 and r.slo is None
+    # with weight 1:3 both classes should actually appear
+    names = {r.cls for r in wl}
+    assert names == {"interactive", "batch"}
+
+
+def test_poisson_workload_rate():
+    wl = poisson_workload(400, 8.0, CLASSES, seed=0)
+    mean_gap = wl[-1].arrival_s / len(wl)
+    assert mean_gap == pytest.approx(1 / 8.0, rel=0.2)
+
+
+def test_poisson_workload_validation():
+    with pytest.raises(ValueError):
+        poisson_workload(4, 0.0, CLASSES)
+    with pytest.raises(ValueError):
+        poisson_workload(4, 1.0, ())
+    assert poisson_workload(0, 1.0, CLASSES) == []
+
+
+def test_scale_rate():
+    wl = poisson_workload(16, 2.0, CLASSES, seed=5)
+    fast = scale_rate(wl, 4.0)
+    assert [r.arrival_s for r in fast] == \
+        pytest.approx([r.arrival_s / 4.0 for r in wl])
+    # same requests, only the clock changes; originals untouched
+    assert [(r.prompt, r.max_new, r.seed) for r in fast] == \
+        [(r.prompt, r.max_new, r.seed) for r in wl]
+    assert wl[0].arrival_s != fast[0].arrival_s
+    with pytest.raises(ValueError):
+        scale_rate(wl, 0.0)
+
+
+def test_trace_workload_sorts_and_defaults():
+    wl = trace_workload([
+        {"arrival_s": 0.5, "prompt": [1, 2], "priority": 1},
+        {"arrival_s": 0.1, "prompt": [3], "max_new": 2,
+         "slo": {"ttft_s": 0.05}},
+    ])
+    assert [r.arrival_s for r in wl] == [0.1, 0.5]
+    assert wl[0].slo == SLO(ttft_s=0.05) and wl[0].max_new == 2
+    assert wl[1].priority == 1 and wl[1].max_new == 8    # default
+
+
+# ---------------------------------------------------------------------------
+# latency summaries
+
+
+def test_percentile():
+    xs = list(range(1, 101))
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile(xs, 99) == pytest.approx(99.01)
+    assert percentile([], 99) == 0.0
+
+
+def _rec(rid, arrival, first, finish, tokens, slo=None, rejected=False,
+         priority=0, preemptions=0):
+    return RequestLatency(rid=rid, priority=priority, arrival_s=arrival,
+                          first_token_s=first, finish_s=finish,
+                          tokens_out=tokens, preemptions=preemptions,
+                          rejected=rejected,
+                          slo_ttft_s=slo.ttft_s if slo else None,
+                          slo_per_token_s=slo.per_token_s if slo else None)
+
+
+def test_request_latency_slo():
+    ok = _rec(0, 0.0, 0.05, 1.05, 11, slo=SLO(ttft_s=0.1, per_token_s=0.2))
+    assert ok.ttft_s == pytest.approx(0.05)
+    assert ok.tpot_s == pytest.approx(0.1)
+    assert ok.slo_met
+    late = _rec(1, 0.0, 0.5, 1.0, 6, slo=SLO(ttft_s=0.1))
+    assert not late.slo_met                       # blew the TTFT budget
+    slow = _rec(2, 0.0, 0.05, 3.05, 11, slo=SLO(per_token_s=0.2))
+    assert not slow.slo_met                       # blew the per-token budget
+    rej = _rec(3, 0.0, -1.0, 0.2, 0, slo=SLO(ttft_s=9.0), rejected=True)
+    assert rej.ttft_s is None and not rej.slo_met
+    free = _rec(4, 0.0, 5.0, 6.0, 2)              # no SLO declared
+    assert not free.has_slo and free.slo_met
+
+
+def test_latency_stats_summary():
+    recs = [
+        _rec(0, 0.0, 0.1, 1.0, 5, slo=SLO(ttft_s=0.2)),
+        _rec(1, 0.0, 0.9, 2.0, 5, slo=SLO(ttft_s=0.2), preemptions=1),
+        _rec(2, 0.0, -1.0, 0.5, 0, rejected=True),
+    ]
+    s = latency_stats(recs, elapsed_s=2.0)
+    assert s.n == 3 and s.completed == 2 and s.rejected == 1
+    assert s.preemptions == 1
+    assert s.slo_requests == 2 and s.slo_met == 1
+    assert s.slo_attainment == pytest.approx(0.5)
+    assert s.throughput_rps == pytest.approx(1.0)
+    assert s.goodput_rps == pytest.approx(0.5)    # one SLO-meeting request
+    assert s.ttft_p50_s == pytest.approx(0.5)
+    d = s.as_dict()
+    assert d["goodput_rps"] == pytest.approx(0.5)
+    empty = latency_stats([], elapsed_s=1.0)
+    assert empty.n == 0 and empty.goodput_rps == 0.0
+
+
+# ---------------------------------------------------------------------------
+# in-flight fetch coalescing (the dedup bugfix)
+
+
+K = (0, 7)
+
+
+def test_tracker_coalesces_resubmit_onto_wire():
+    tr = OverlapTracker(host_bw=1e9)
+    assert tr.submit(K, int(1e9)) is False        # 1s transfer, lands at 1.0
+    tr.advance(0.2)
+    tr.drop(K)                                    # slot evicted mid-flight
+    assert tr.submit(K, int(1e9)) is True         # rides the same bytes
+    assert tr.fetches_deduped == 1
+    assert tr.pending[K] == pytest.approx(1.0)    # original completion
+    stall = tr.wait([K])
+    assert stall == pytest.approx(0.8)            # 1.0 - clock(0.2)
+    # a serial re-fetch would have queued behind the first: landing at 2.0
+    assert tr.clock == pytest.approx(1.0)
+
+
+def test_tracker_fresh_faster_fetch_wins():
+    tr = OverlapTracker(host_bw=1e9)
+    tr.submit(K, int(1e9), tier=TIER_DISK, duration=1.0)
+    tr.drop(K)
+    tr.advance(0.1)
+    # the store can now serve from host DRAM: a fresh fetch lands at 0.15,
+    # far earlier than the disk bytes at 1.0 — don't ride the slow wire
+    assert tr.submit(K, int(1e9), tier=TIER_HOST, duration=0.05) is False
+    assert tr.fetches_deduped == 0
+    assert tr.pending[K] == pytest.approx(0.15)
+
+
+def test_tracker_landed_transfer_not_coalesced():
+    tr = OverlapTracker(host_bw=1e9)
+    tr.submit(K, int(1e9), duration=0.1)
+    tr.drop(K)
+    tr.advance(0.5)                               # bytes landed long ago
+    assert tr.submit(K, int(1e9), duration=0.1) is False
+    assert tr.fetches_deduped == 0
+    assert tr.pending[K] == pytest.approx(0.6)
+
+
+def test_slot_buffer_dedups_thrashing_fetch(backbone):
+    """Capacity-1 thrash: A, B, A again while A's first transfer is still
+    on the wire — the re-fetch must ride it, charging no new bytes."""
+    cfg, model, params, _ = backbone
+    from repro.core.tracing import moe_layer_ids
+    from repro.serving.engine import unstack_layers
+    layers = unstack_layers(cfg, params)
+    moe_layers = [layers[i]["moe"] for i in moe_layer_ids(cfg)]
+    store = HostExpertStore(moe_layers)
+    tr = OverlapTracker(host_bw=1e3)              # pathologically slow wire
+    cache, buf = make_offload_cache(store, capacity=1, host_bw=1e3,
+                                    tracker=tr)
+    cache.access((0, 1))
+    cache.access((0, 2))                          # evicts (0,1) mid-flight
+    bytes_two = buf.fetch_bytes
+    cache.access((0, 1))                          # back before it landed
+    assert buf.fetches_deduped == 1
+    assert tr.fetches_deduped == 1
+    assert buf.fetch_count == 2                   # only two real transfers
+    assert buf.fetch_bytes == bytes_two           # no new bytes charged
+    # the blocking model stays the upper bound: all three charged
+    assert buf.sim_fetch_s == pytest.approx(
+        3 * store.bytes_per_expert / 1e3)
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    from helpers import tiny_backbone
+    return tiny_backbone()

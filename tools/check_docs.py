@@ -1,0 +1,125 @@
+"""Documentation lint for the serving stack (CI gate, no dependencies).
+
+Two checks:
+
+  1. **Config/stats docstring coverage** — every public field of the
+     dataclasses listed in ``DOCUMENTED_CLASSES`` must be *named* in its
+     class docstring, so units and semantics live next to the field and a
+     new knob cannot land undocumented. (A pydocstyle-lite: we check
+     coverage, not prose style.)
+
+  2. **Markdown link integrity** — every relative link target in
+     ``README.md`` and ``docs/*.md`` must exist in the repo, and every
+     backticked repo path (``src/...``, ``tests/...``, ...) must point at
+     a real file or directory, so the architecture tour cannot rot
+     silently as files move.
+
+Run from the repo root: ``PYTHONPATH=src python tools/check_docs.py``.
+Exit status 0 = clean; 1 = violations (each printed on its own line).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (module, class): every dataclass field must appear by name in __doc__
+DOCUMENTED_CLASSES = [
+    ("repro.serving.config", "ServeConfig"),
+    ("repro.serving.engine", "EngineStats"),
+    ("repro.serving.kvpool", "PoolStats"),
+    ("repro.serving.expertstore", "TierConfig"),
+    ("repro.serving.workload", "SLO"),
+    ("repro.serving.workload", "PriorityClass"),
+    ("repro.serving.workload", "WorkloadRequest"),
+    ("repro.core.metrics", "RequestLatency"),
+    ("repro.core.metrics", "LatencyStats"),
+]
+
+MARKDOWN = ["README.md"] + sorted(
+    os.path.join("docs", f)
+    for f in (os.listdir(os.path.join(REPO, "docs"))
+              if os.path.isdir(os.path.join(REPO, "docs")) else [])
+    if f.endswith(".md"))
+
+# backticked repo paths must start with one of these to be checked (other
+# backticks are code, flags, or config values, not paths)
+PATH_PREFIXES = ("src/", "tests/", "docs/", "benchmarks/", "examples/",
+                 "tools/", ".github/")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+TICK_RE = re.compile(r"`([^`\n]+)`")
+
+
+def check_docstrings() -> list:
+    errors = []
+    for mod_name, cls_name in DOCUMENTED_CLASSES:
+        mod = __import__(mod_name, fromlist=[cls_name])
+        cls = getattr(mod, cls_name)
+        doc = cls.__doc__ or ""
+        if not dataclasses.is_dataclass(cls):
+            errors.append(f"{mod_name}.{cls_name}: not a dataclass")
+            continue
+        for f in dataclasses.fields(cls):
+            if f.name.startswith("_"):
+                continue
+            if not re.search(rf"``{re.escape(f.name)}``", doc):
+                errors.append(
+                    f"{mod_name}.{cls_name}: field ``{f.name}`` is not "
+                    "documented in the class docstring")
+    return errors
+
+
+def check_markdown() -> list:
+    errors = []
+    for rel in MARKDOWN:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            errors.append(f"{rel}: file listed for checking does not exist")
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not resolved.startswith(REPO):
+                continue        # e.g. the CI badge's ../../actions link
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: broken link -> {target}")
+        for m in TICK_RE.finditer(text):
+            t = m.group(1).strip()
+            if not t.startswith(PATH_PREFIXES):
+                continue
+            if any(c in t for c in " <>*?$(){}|"):
+                continue        # a command line or glob, not a path
+            t = t.split("::")[0].split(":")[0]   # strip :line / ::symbol
+            if not os.path.exists(os.path.join(REPO, t)):
+                errors.append(f"{rel}: backticked path does not exist "
+                              f"-> {t}")
+    return errors
+
+
+def main() -> int:
+    errors = check_docstrings() + check_markdown()
+    for e in errors:
+        print(f"check_docs: {e}")
+    if errors:
+        print(f"check_docs: {len(errors)} violation(s)")
+        return 1
+    n_fields = sum(
+        len(dataclasses.fields(getattr(__import__(m, fromlist=[c]), c)))
+        for m, c in DOCUMENTED_CLASSES)
+    print(f"check_docs: OK ({len(DOCUMENTED_CLASSES)} classes / "
+          f"{n_fields} fields documented, {len(MARKDOWN)} markdown files "
+          "link-checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
