@@ -274,17 +274,24 @@ def _prefix_sharing(model, params, cfg, prompts, shared_len: int,
 
 
 def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
-                batch: int, log=print):
+                batch: int, replacement: str = "both",
+                cold_dtype: str = "both", log=print):
     """Tiered expert store under load: shard count x tier-0 capacity sweep
     (per-tier hit rates, stall-by-tier, tok/s), then horizon-aware vs
-    fixed-horizon prefetch at equal tier-0 capacity.
+    fixed-horizon prefetch at equal tier-0 capacity, then learned-vs-LRU
+    replacement and int8-vs-full cold tiers side by side.
 
     The tier hardware model is scaled to the architecture's own roofline
     (layer_compute_s="roofline" drives the OverlapTracker clock): a tier-2
     fetch costs ~1.2 layers of compute, a tier-3 fetch ~2.5 — so a
     single-layer lookahead cannot hide the slow tiers but a tier-scaled
-    horizon can. Every configuration's streams must be token-identical to
-    the single-host engine's."""
+    horizon can. Every full-precision configuration's streams must be
+    token-identical to the single-host engine's; the lossy int8 run
+    reports (not asserts) whether its streams matched.
+
+    ``replacement`` in {"lru", "learned", "both"} picks the eviction
+    policies swept; ``cold_dtype`` in {"none", "int8", "both"} picks the
+    cold-tier storage comparison."""
     from repro.core.policies import NextLayerAllPolicy
     from repro.core.tracing import moe_layer_ids
     from repro.launch.dryrun import decode_layer_roofline
@@ -304,7 +311,8 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
     per_layer = decode_layer_roofline(cfg, batch=batch)
     mean_layer = sum(a + f for a, f in per_layer) / len(per_layer)
 
-    def tier_cfg(shards, horizons=(1, 1, 2, 3)):
+    def tier_cfg(shards, horizons=(1, 1, 2, 3), cache_experts=None,
+                 cold=None):
         # scale the tier hardware model so one MoE layer's *batch* of
         # peer/disk fetches costs ~1.5/~2.2 layers of this arch's roofline
         # compute: a single-layer lookahead cannot hide the slow tiers,
@@ -317,56 +325,86 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
         return TierConfig(
             num_shards=shards,
             shard_dram_experts=dram,
-            cache_experts=max(2, n_total // 6),
+            cache_experts=(max(2, n_total // 6) if cache_experts is None
+                           else cache_experts),
             peer_latency_s=0.3 * dur_peer,
             peer_bw=expert_bytes / (0.7 * dur_peer),
             disk_latency_s=0.3 * dur_disk,
             disk_bw=expert_bytes / (0.7 * dur_disk),
-            horizons=horizons)
+            horizons=horizons,
+            cold_dtype=cold)
 
-    def run_engine(tc, cap):
+    # local DRAM is an order faster than the interconnect: a full layer's
+    # worth of tier-1 refetches costs ~0.4 layers of compute, so a
+    # single-layer lookahead hides them (tier-1 duration is modeled by the
+    # SlotBuffer's host_bw, not TierConfig)
+    host_bw = expert_bytes * e / (0.4 * mean_layer)
+
+    def run_engine(tc, cap, eviction="lru", assert_parity=True):
         eng = BatchedOffloadEngine(model, params, pol, cap,
+                                   eviction=eviction, host_bw=host_bw,
                                    max_batch=batch,
                                    layer_compute_s="roofline", tiers=tc)
         t0 = time.perf_counter()
         out = eng.generate(prompts, max_new=max_new, cache_len=cache_len)
         wall = time.perf_counter() - t0
-        assert out == ref_out, "tiered store changed a token stream"
+        if assert_parity:
+            assert out == ref_out, "tiered store changed a token stream"
         s = eng.stats
+        st = eng.core.store.stats
         accesses = max(s.hits + s.misses, 1)
+        slow = (s.fetches_by_tier.get(2, 0) + s.fetches_by_tier.get(3, 0))
+        fast = s.hits + s.fetches_by_tier.get(1, 0)
         row = {
+            "replacement": eviction,
             "tok_s": s.tokens / max(wall, 1e-9),
             "tier0_hit_rate": s.hit_rate,
+            # share of expert materialisations served without touching a
+            # slow tier: tier-0 slot hits plus tier-1 (local DRAM) fetches
+            # over everything including tier-2/3 fetches
+            "tier01_hit_rate": fast / max(fast + slow, 1),
             "tier_fetch_rates": {t: n / accesses
                                  for t, n in s.fetches_by_tier.items()},
             "fetches_by_tier": dict(s.fetches_by_tier),
+            "fetch_bytes_by_tier": dict(s.fetch_bytes_by_tier),
             "stall_by_tier_ms": {t: v * 1e3
                                  for t, v in s.stall_by_tier.items()},
             "sim_stall_ms": s.sim_stall_s * 1e3,
             "overlapped_ms": s.overlapped_s * 1e3,
             "deep_prefetch_hits": s.deep_prefetch_hits,
-            "spilled_experts": eng.core.store.stats.spilled_experts,
+            "horizon_clamps": s.horizon_clamps,
+            "evictions_learned": s.evictions_learned,
+            "evictions_lru": s.evictions_lru,
+            "store_evictions_learned": st.cache_evictions_learned,
+            "store_evictions_lru": st.cache_evictions_lru,
+            "quantized_fetches": st.quantized_fetches,
+            "spilled_experts": st.spilled_experts,
+            "streams_match_ref": out == ref_out,
         }
         eng.core.store.close()
         return row
 
+    reps = ("lru", "learned") if replacement == "both" else (replacement,)
     min_cap = batch * cfg.moe.top_k
     caps = sorted({max(min_cap, n_total // 3), n_total})
     sweep = []
     log(f"  tiers sweep ({n_total} experts, {e}/layer x {n_moe} layers): "
-        "shards,cap,tok/s,tier0_hit,fetch_t1/t2/t3,stall_ms(t1/t2/t3)")
+        "shards,cap,policy,tok/s,tier0_hit,tier01_hit,fetch_t1/t2/t3,"
+        "stall_ms(t1/t2/t3)")
     for shards in (1, 4):
         for cap in caps:
-            row = {"num_shards": shards, "tier0_capacity": cap}
-            row.update(run_engine(tier_cfg(shards), cap))
-            sweep.append(row)
-            f = row["fetches_by_tier"]
-            st = row["stall_by_tier_ms"]
-            log(f"  {shards},{cap},{row['tok_s']:.1f},"
-                f"{row['tier0_hit_rate']:.3f},"
-                f"{f.get(1, 0)}/{f.get(2, 0)}/{f.get(3, 0)},"
-                f"{st.get(1, 0.0):.2f}/{st.get(2, 0.0):.2f}/"
-                f"{st.get(3, 0.0):.2f}")
+            for rep in reps:
+                row = {"num_shards": shards, "tier0_capacity": cap}
+                row.update(run_engine(tier_cfg(shards), cap, eviction=rep))
+                sweep.append(row)
+                f = row["fetches_by_tier"]
+                st = row["stall_by_tier_ms"]
+                log(f"  {shards},{cap},{rep},{row['tok_s']:.1f},"
+                    f"{row['tier0_hit_rate']:.3f},"
+                    f"{row['tier01_hit_rate']:.3f},"
+                    f"{f.get(1, 0)}/{f.get(2, 0)}/{f.get(3, 0)},"
+                    f"{st.get(1, 0.0):.2f}/{st.get(2, 0.0):.2f}/"
+                    f"{st.get(3, 0.0):.2f}")
 
     # horizon-aware vs fixed-horizon at equal tier-0 capacity. Compared at
     # the capacity that holds the lookahead window's working set: deeper
@@ -382,7 +420,8 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
         f"{fixed['sim_stall_ms']:.2f} -> {aware['sim_stall_ms']:.2f} ms "
         f"({reduction:.1%} less), deep prefetch hits "
         f"{aware['deep_prefetch_hits']}")
-    return {
+
+    results = {
         "sweep": sweep,
         "streams_identical": True,
         "num_experts_total": n_total,
@@ -392,7 +431,63 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
         "horizon_aware": aware,
         "horizon_stall_reduction": reduction,
         "batch": batch,
+        "replacement_axis": list(reps),
+        "cold_dtype_axis": cold_dtype,
     }
+
+    # learned vs LRU replacement at equal capacity, with a tier-1 cache
+    # sized where retention matters (half the expert set): the scorer
+    # keeps the copies predicted soonest-reused where LRU cycles them out
+    if len(reps) == 2:
+        cmp_cap = max(min_cap, n_total // 3)
+        cmp_tc = lambda: tier_cfg(4, cache_experts=n_total // 2)  # noqa: E731
+        cmp = {rep: run_engine(cmp_tc(), cmp_cap, eviction=rep)
+               for rep in reps}
+        hit_gain = (cmp["learned"]["tier01_hit_rate"]
+                    - cmp["lru"]["tier01_hit_rate"])
+        stall_red = 1.0 - (cmp["learned"]["sim_stall_ms"]
+                           / max(cmp["lru"]["sim_stall_ms"], 1e-12))
+        log(f"  learned vs lru (4 shards, cap {cmp_cap}, cache "
+            f"{n_total // 2}): tier0+1 hit "
+            f"{cmp['lru']['tier01_hit_rate']:.3f} -> "
+            f"{cmp['learned']['tier01_hit_rate']:.3f} (+{hit_gain:.3f}), "
+            f"stall {cmp['lru']['sim_stall_ms']:.2f} -> "
+            f"{cmp['learned']['sim_stall_ms']:.2f} ms "
+            f"({stall_red:.1%} less)")
+        results["replacement_comparison"] = {
+            "tier0_capacity": cmp_cap,
+            "cache_experts": n_total // 2,
+            "lru": cmp["lru"],
+            "learned": cmp["learned"],
+            "tier01_hit_gain": hit_gain,
+            "stall_reduction": stall_red,
+        }
+
+    # int8 cold tiers vs full precision: same config, same requests —
+    # tier-2/3 fetch bytes shrink by the quantization ratio. Lossy, so
+    # stream parity is reported, not asserted.
+    if cold_dtype in ("int8", "both"):
+        full = run_engine(tier_cfg(4), cap)
+        cold = run_engine(tier_cfg(4, cold=("int8")), cap,
+                          assert_parity=False)
+        b_full = sum(full["fetch_bytes_by_tier"].get(t, 0) for t in (2, 3))
+        b_cold = sum(cold["fetch_bytes_by_tier"].get(t, 0) for t in (2, 3))
+        ratio = b_full / max(b_cold, 1)
+        log(f"  int8 cold tiers (4 shards, cap {cap}): tier-2/3 fetch "
+            f"bytes {b_full / 2**20:.2f} -> {b_cold / 2**20:.2f} MiB "
+            f"({ratio:.2f}x smaller), quantized fetches "
+            f"{cold['quantized_fetches']}, streams match: "
+            f"{cold['streams_match_ref']}")
+        results["cold_comparison"] = {
+            "tier0_capacity": cap,
+            "full": full,
+            "int8": cold,
+            "cold_fetch_bytes_t23": b_cold,
+            "full_fetch_bytes_t23": b_full,
+            "cold_fetch_bytes_ratio_t23": ratio,
+            "cold_streams_match": cold["streams_match_ref"],
+        }
+    return results
 
 
 def _slo_sweep(model, params, cfg, n_requests: int, load_factors,
@@ -662,7 +757,8 @@ def _longctx_sweep(model, params, cfg, lengths, batch: int, block_size: int,
             "batch": batch, "block_size": block_size}
 
 
-def _run_tiers(out_path=None, log=print):
+def _run_tiers(out_path=None, replacement="both", cold_dtype="both",
+               log=print):
     """Build the untrained reduced backbone (stream parity + modeled stall
     only — prediction quality is the policy benches' job), run the tier
     sweep, write the artifact."""
@@ -679,7 +775,8 @@ def _run_tiers(out_path=None, log=print):
     corpus = make_topic_corpus(cfg.vocab_size, n_topics=4, seed=0)
     prompts = sample_prompts(corpus, 6, 8, seed=2)
     results = _tier_sweep(model, params, cfg, prompts, max_new=6,
-                          cache_len=32, batch=4, log=log)
+                          cache_len=32, batch=4, replacement=replacement,
+                          cold_dtype=cold_dtype, log=log)
     results["wall_s"] = time.time() - t0
     if out_path:
         os.makedirs(os.path.dirname(os.path.abspath(out_path)),
@@ -758,7 +855,8 @@ def run(log=print):
 
 
 def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
-             tiers=False, slo=False, log=print):
+             tiers=False, slo=False, replacement="both", cold_dtype="both",
+             log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
     ragged-length admission-latency / memory-high-water workload;
@@ -782,7 +880,8 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
         return _run_longctx(lengths=(1024, 2048, 4096, 8192), iters=5,
                             out_path=out_path, log=log)
     if tiers:
-        return _run_tiers(out_path=out_path, log=log)
+        return _run_tiers(out_path=out_path, replacement=replacement,
+                          cold_dtype=cold_dtype, log=log)
     if slo:
         return _run_slo(n_requests=16, load_factors=(0.4, 1.5, 4.0),
                         out_path=out_path, log=log)
@@ -877,6 +976,16 @@ def main():
                            "FIFO scheduling — p50/p95/p99 TTFT, "
                            "goodput-under-SLO, preemption counts, with "
                            "streams pinned to an uncontended reference")
+    ap.add_argument("--replacement", choices=("lru", "learned", "both"),
+                    default="both",
+                    help="--tiers only: eviction policies to sweep "
+                         "(learned = predictor-driven reuse-distance "
+                         "replacement)")
+    ap.add_argument("--cold-dtype", choices=("none", "int8", "both"),
+                    default="both",
+                    help="--tiers only: cold-tier (peer/disk) storage "
+                         "dtype comparison; int8 halves fetch bytes but "
+                         "is lossy")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
     if args.longctx and not args.tiny:
@@ -887,7 +996,8 @@ def main():
                  out_path=args.out)
     elif args.tiny or args.mixed or args.prefix or args.tiers or args.slo:
         run_tiny(args.out, mixed=args.mixed, longctx=args.longctx,
-                 prefix=args.prefix, tiers=args.tiers, slo=args.slo)
+                 prefix=args.prefix, tiers=args.tiers, slo=args.slo,
+                 replacement=args.replacement, cold_dtype=args.cold_dtype)
     else:
         results = run()
         if args.out:

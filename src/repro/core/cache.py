@@ -1,8 +1,19 @@
 """GPU-VRAM-as-expert-cache model (paper §2.3): fixed expert-slot capacity,
-LRU or LFU eviction, explicit prefetch, full hit/miss accounting.
+LRU, LFU or predictor-driven ("learned") eviction, explicit prefetch, full
+hit/miss accounting.
 
 Keys are (layer, expert) pairs. This object is the *simulator's* cache; the
 device-resident jittable slot-buffer lives in serving/offload.py.
+
+``policy="learned"`` turns the activation predictor into the replacement
+policy (the paper's thesis applied to *eviction*, not just prefetch): a
+:class:`~repro.core.policies.ReuseDistanceScorer` maps the multi-horizon
+prediction window to a per-key predicted-next-use distance, and eviction
+picks the unpinned key predicted furthest from reuse — a key no prediction
+covers counts as infinitely far (the predictor does not foresee its use),
+and LRU order breaks ties, so with no predictions at all the policy
+degrades to exact LRU. Victim provenance (prediction-informed vs pure LRU
+fallback) is counted in :class:`CacheStats`.
 """
 from __future__ import annotations
 
@@ -13,13 +24,32 @@ from typing import Hashable, Iterable, Optional
 
 @dataclass
 class CacheStats:
+    """Hit/miss/eviction accounting for one :class:`ExpertCache`.
+
+      * ``hits`` / ``misses`` — resident vs not at ``access`` time.
+      * ``prefetches`` — prefetches that actually inserted an entry.
+      * ``prefetch_hits`` — accesses served by a prefetched entry.
+      * ``deep_prefetch_hits`` — accesses served by an entry prefetched
+        more than one MoE layer ahead (horizon-aware deep prefetch).
+      * ``redundant_prefetches`` — prefetches of an already-resident key
+        (recency refresh only, no insert).
+      * ``evictions`` — entries evicted to make room (all policies).
+      * ``evictions_learned`` — learned-mode evictions where at least one
+        candidate had a live reuse-distance prediction (the victim choice
+        was prediction-informed).
+      * ``evictions_lru`` — learned-mode evictions that fell back to pure
+        LRU order because no candidate had a prediction.
+      * ``demand_fetches`` — misses that triggered an on-demand insert.
+    """
     hits: int = 0
     misses: int = 0
-    prefetches: int = 0        # prefetches that actually inserted an entry
-    prefetch_hits: int = 0     # accesses served by a prefetched entry
-    deep_prefetch_hits: int = 0  # ... by an entry prefetched >1 layer ahead
-    redundant_prefetches: int = 0  # prefetches of an already-resident key
+    prefetches: int = 0
+    prefetch_hits: int = 0
+    deep_prefetch_hits: int = 0
+    redundant_prefetches: int = 0
     evictions: int = 0
+    evictions_learned: int = 0
+    evictions_lru: int = 0
     demand_fetches: int = 0
 
     @property
@@ -33,11 +63,14 @@ class CacheStats:
 
 class ExpertCache:
     def __init__(self, capacity: int, policy: str = "lru", on_evict=None,
-                 on_insert=None):
+                 on_insert=None, scorer=None):
         assert capacity >= 1
-        assert policy in ("lru", "lfu")
+        assert policy in ("lru", "lfu", "learned")
+        assert policy != "learned" or scorer is not None, \
+            "policy='learned' needs a ReuseDistanceScorer"
         self.capacity = capacity
         self.policy = policy
+        self.scorer = scorer
         # on_evict releases the device slot; with a tiered store behind the
         # slot buffer, the release *demotes* the expert into the store's
         # host-side cache — eviction is a move down the hierarchy, not a
@@ -89,13 +122,38 @@ class ExpertCache:
                 f"{self.capacity} is too small for the concurrent working set")
         if self.policy == "lru":
             victim = evictable[0]            # OrderedDict order == LRU order
-        else:  # lfu, LRU tie-break via OrderedDict order
+        elif self.policy == "lfu":           # LRU tie-break via dict order
             victim = min(evictable,
                          key=lambda k: (self._freq.get(k, 0),))
+        else:
+            victim = self._learned_victim(evictable)
         del self._entries[victim]
         if self.on_evict is not None:
             self.on_evict(victim)
         self.stats.evictions += 1
+
+    def _learned_victim(self, evictable):
+        """The unpinned key predicted furthest from reuse. A key with no
+        live prediction counts as infinitely far — the predictor does not
+        foresee its use within the horizon window, which makes it the best
+        victim. Iteration order is LRU order and strict ``>`` keeps the
+        earliest candidate on ties, so equal-distance (and the
+        no-predictions-at-all) cases degrade to exact LRU."""
+        victim, best = None, -1.0
+        informed = False
+        for k in evictable:
+            d = self.scorer.distance(k)
+            if d is None:
+                d = float("inf")
+            else:
+                informed = True
+            if d > best:
+                victim, best = k, d
+        if informed:
+            self.stats.evictions_learned += 1
+        else:
+            self.stats.evictions_lru += 1
+        return victim
 
     def _insert(self, key, provenance: Optional[int]) -> None:
         assert key not in self._entries

@@ -11,14 +11,81 @@ truth. Policies:
   MoEInfinityPolicy  — rEAM cosine match against a k-means EAMC [1]
   MoEBeyondPolicy    — the paper: learned transformer predictor
   OraclePolicy       — ground truth (upper bound)
+
+:class:`ReuseDistanceScorer` is the bridge from prediction to *eviction*:
+it folds the engine's multi-horizon prediction windows into a per-key
+predicted-next-use distance on a logical MoE-layer clock, which the
+``policy="learned"`` replacement mode of ``core/cache.ExpertCache`` and the
+tier-1 cache of ``serving/expertstore.TieredExpertStore`` consult to pick
+the victim predicted furthest from reuse.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.eam import EAMC, REAMBuilder, build_ream
+
+
+class ReuseDistanceScorer:
+    """Predicted-next-use distances for learned cache replacement.
+
+    The engine records every multi-horizon prediction window it obtains
+    (``record(keys, distance=d)``: these keys are predicted for use ``d``
+    MoE layers from now) and ticks a logical clock once per MoE layer
+    computed (``tick``). ``distance(key)`` is then the number of MoE layers
+    until the key's soonest *still-future* predicted use, or ``None`` when
+    no live prediction covers it — stale predictions (their layer already
+    ran) expire rather than protect a key forever.
+
+    Shared by both cache layers: tier-0 slot-buffer eviction
+    (``ExpertCache(policy="learned")``) and the tier-1 promoted-copy cache
+    (``TieredExpertStore``), so one prediction pass drives victim choice
+    across the hierarchy.
+    """
+
+    #: prune stale entries when the map outgrows this (keys spaces are
+    #: n_moe_layers * num_experts, so this is generous)
+    PRUNE_AT = 65536
+
+    def __init__(self):
+        self.clock = 0                        # MoE layers computed so far
+        self._next_use: Dict[Tuple[int, int], int] = {}
+
+    def record(self, keys: Sequence, distance: int) -> None:
+        """Keys predicted for use ``distance`` MoE layers from now (0 =
+        the next MoE layer). Keeps the soonest live prediction per key."""
+        t = self.clock + distance + 1
+        for k in keys:
+            cur = self._next_use.get(k)
+            if cur is None or cur <= self.clock or t < cur:
+                self._next_use[k] = t
+
+    def tick(self, n: int = 1) -> None:
+        """One (or ``n``) MoE layer(s) of compute completed."""
+        self.clock += n
+        if len(self._next_use) > self.PRUNE_AT:
+            self._next_use = {k: t for k, t in self._next_use.items()
+                              if t > self.clock}
+
+    def distance(self, key) -> Optional[int]:
+        """MoE layers until the soonest predicted use of ``key``; ``None``
+        when no live prediction covers it."""
+        t = self._next_use.get(key)
+        if t is None or t <= self.clock:
+            return None
+        return t - self.clock
+
+    def reset(self) -> None:
+        self.clock = 0
+        self._next_use.clear()
+
+
+def _sigmoid(logits: np.ndarray) -> np.ndarray:
+    """Per-expert confidence — the same sigmoid probability the paper's
+    selection rule thresholds (core/metrics.select_experts)."""
+    return 1.0 / (1.0 + np.exp(-np.asarray(logits, np.float64)))
 
 
 class Policy:
@@ -38,6 +105,15 @@ class Policy:
     def predict(self, t: int, layer: int) -> np.ndarray:
         """Experts to prefetch for (token t, layer)."""
         return np.empty((0,), np.int64)
+
+    def predict_scored(self, t: int, layer: int):
+        """(experts, confidences): per-expert confidence in [0, 1] aligned
+        with the prediction array, or ``None`` when the policy has no
+        confidence notion (heuristics). Confidence gates *deep* prefetch:
+        the engine only fetches a slow-tier key several layers early when
+        the predictor is confident enough (``TierConfig.deep_confidence``).
+        """
+        return self.predict(t, layer), None
 
     # --- batched API (serving/scheduler.py) -------------------------------
     # Defaults loop over the scalar interface; vectorised policies override.
@@ -256,6 +332,9 @@ class OnlineMoEBeyondPolicy(Policy):
             self._seen_t = t
 
     def predict(self, t, layer):
+        return self.predict_scored(t, layer)[0]
+
+    def predict_scored(self, t, layer):
         import jax.numpy as jnp
 
         from repro.core.metrics import select_experts
@@ -264,7 +343,7 @@ class OnlineMoEBeyondPolicy(Policy):
         # engine before deeper layers run; fall back to t-1 context)
         n = min(len(self._emb), pc.max_seq)
         if n == 0:
-            return np.empty((0,), np.int64)
+            return np.empty((0,), np.int64), np.empty((0,), np.float64)
         emb = np.zeros((1, n, pc.token_emb_dim), np.float32)
         emb[0] = np.stack(self._emb[-n:])
         logits = np.asarray(self._apply(
@@ -272,7 +351,9 @@ class OnlineMoEBeyondPolicy(Policy):
             jnp.full((1, n), layer, jnp.int32),
             jnp.ones((1, n), bool)))[0, -1, : pc.num_experts]
         sel = select_experts(logits, self.width, threshold=-1e9)
-        return np.nonzero(sel)[0]
+        ids = np.nonzero(sel)[0]
+        conf = _sigmoid(logits[ids])
+        return ids, conf
 
     @staticmethod
     def batchable(policies: Sequence["Policy"]) -> bool:
@@ -304,21 +385,29 @@ class OnlineMoEBeyondPolicy(Policy):
     @staticmethod
     def predict_many_layers(policies: Sequence["OnlineMoEBeyondPolicy"],
                             layers: Sequence[int],
-                            ) -> Dict[int, List[np.ndarray]]:
+                            with_scores: bool = False,
+                            ) -> Dict[int, List]:
         """``predict_many`` across a lookahead window of MoE layers: one
         jitted forward serves every (request, future-layer) pair — the
         layer id is a per-row input, so deeper-horizon predictions ride
         the same batch as next-layer ones instead of multiplying predictor
         calls. Returns {layer: per-request prediction arrays}; per-request
-        results match the scalar ``predict(t, layer)`` for each layer."""
+        results match the scalar ``predict(t, layer)`` for each layer.
+        With ``with_scores`` each per-request entry is an
+        ``(experts, confidences)`` pair instead — the sigmoid probability
+        of each selected expert, matching ``predict_scored``."""
         import jax.numpy as jnp
 
         from repro.core.metrics import select_experts
         pc = policies[0].pcfg
         ns = [min(len(p._emb), pc.max_seq) for p in policies]
-        out: Dict[int, List[np.ndarray]] = {
-            layer: [np.empty((0,), np.int64)] * len(policies)
-            for layer in layers}
+
+        def empty():
+            ids = np.empty((0,), np.int64)
+            return (ids, np.empty((0,), np.float64)) if with_scores else ids
+
+        out: Dict[int, List] = {
+            layer: [empty()] * len(policies) for layer in layers}
         live = [i for i, n in enumerate(ns) if n > 0]
         if not live or not layers:
             return out
@@ -339,7 +428,8 @@ class OnlineMoEBeyondPolicy(Policy):
         for j, (i, layer) in enumerate(rows):
             lg = logits[j, ns[i] - 1, : pc.num_experts]
             sel = select_experts(lg, policies[i].width, threshold=-1e9)
-            out[layer][i] = np.nonzero(sel)[0]
+            ids = np.nonzero(sel)[0]
+            out[layer][i] = (ids, _sigmoid(lg[ids])) if with_scores else ids
         return out
 
 
@@ -420,6 +510,25 @@ class PerRequestPolicy:
                 and OnlineMoEBeyondPolicy.batchable(pols)):
             return OnlineMoEBeyondPolicy.predict_many_layers(pols, layers)
         return {layer: self.predict_batch(rids, ts, layer)
+                for layer in layers}
+
+    def predict_batch_multi_scored(self, rids: Sequence[int],
+                                   ts: Sequence[int],
+                                   layers: Sequence[int],
+                                   ) -> Dict[int, List[tuple]]:
+        """``predict_batch_multi`` with confidences: each per-request entry
+        is an ``(experts, confidences)`` pair (confidences ``None`` for
+        policies without a confidence notion). The engine's per-horizon
+        confidence gate and the ReuseDistanceScorer both consume this —
+        one fused forward still serves the whole window for the online
+        predictor."""
+        pols = [self._get(r) for r in rids]
+        if (self._shared is None and len(layers) > 0
+                and OnlineMoEBeyondPolicy.batchable(pols)):
+            return OnlineMoEBeyondPolicy.predict_many_layers(
+                pols, layers, with_scores=True)
+        return {layer: [p.predict_scored(t, layer)
+                        for p, t in zip(pols, ts)]
                 for layer in layers}
 
     def observe_batch(self, rids: Sequence[int], ts: Sequence[int],

@@ -53,6 +53,14 @@ class ServeConfig:
         blocks either way).
 
     Expert storage:
+      * ``replacement`` — eviction policy for the tier-0 expert slots and
+        the tier-1 host cache: "lru" (default), "lfu", or "learned". In
+        learned mode a :class:`~repro.core.policies.ReuseDistanceScorer`
+        fed by the multi-horizon predictor picks the unpinned key
+        predicted furthest from reuse (LRU tiebreak; exact-LRU fallback
+        when no prediction covers any candidate). Streams stay
+        token-identical across policies — only the miss/stall timeline
+        moves.
       * ``tiers`` (a :class:`~repro.serving.expertstore.TierConfig`) swaps
         the single-host expert store for the tiered device/host/peer/disk
         hierarchy: consistent-hash expert->shard placement, per-tier
@@ -87,6 +95,7 @@ class ServeConfig:
     kernel_backend: Optional[str] = None
     prefix_cache: bool = False
     prefix_cache_blocks: Optional[int] = None
+    replacement: str = "lru"
     tiers: Optional[TierConfig] = None
     layer_compute_s: Union[float, str] = 0.0
     preemption: bool = False

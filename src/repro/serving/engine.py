@@ -140,6 +140,17 @@ class EngineStats:
         the modeled transfer completed, then the key was demanded again):
         no second transfer is queued and no bytes are re-charged.
 
+    Learned replacement & horizon control:
+      * ``evictions_learned`` / ``evictions_lru`` — with
+        ``replacement="learned"``, tier-0 slot evictions whose victim
+        choice was prediction-informed vs the pure-LRU fallback (mirrors
+        :class:`~repro.core.cache.CacheStats`; the store's tier-1 cache
+        keeps its own split in StoreStats).
+      * ``horizon_clamps`` — deep-prefetch submissions cut short because a
+        distance's new keys would not fit the tier-0 slots left over after
+        the distance-0 working set and the in-flight pins — the
+        anti-thrash guard for admission-minimum capacity.
+
     Per-run latency:
       * ``latency`` — the latest run's :class:`~repro.core.metrics
         .LatencyStats` (TTFT/per-token percentiles, preemption counts,
@@ -164,6 +175,9 @@ class EngineStats:
     fetch_bytes_by_tier: Dict[int, int] = field(default_factory=dict)
     deep_prefetch_hits: int = 0
     fetches_deduped: int = 0
+    evictions_learned: int = 0
+    evictions_lru: int = 0
+    horizon_clamps: int = 0
     latency: Optional[LatencyStats] = None
 
     @property
@@ -216,9 +230,21 @@ class DecodeCore:
         # in self.layers (device). ``tiers`` (a TierConfig) swaps the
         # single-host store for the device/host/peer/disk hierarchy.
         store_layers = [self.layers[li]["moe"] for li in self.moe_layers]
+        # replacement="learned": one ReuseDistanceScorer shared by the
+        # tier-0 slot cache and the store's tier-1 cache. _submit_prefetch
+        # feeds it the raw (pre-gating) multi-horizon predictions and
+        # _moe_units ticks its clock once per MoE layer computed.
+        if eviction == "learned":
+            from repro.core.policies import ReuseDistanceScorer
+            self.scorer = ReuseDistanceScorer()
+        else:
+            self.scorer = None
+        self._conf_threshold = (tiers.deep_confidence
+                                if tiers is not None else None)
         if tiers is not None:
             from repro.serving.expertstore import TieredExpertStore
-            self.store = TieredExpertStore(store_layers, tiers)
+            self.store = TieredExpertStore(store_layers, tiers,
+                                           scorer=self.scorer)
         else:
             self.store = HostExpertStore(store_layers)
         # how many MoE layers ahead predictions are asked for: the store's
@@ -226,7 +252,8 @@ class DecodeCore:
         self.max_horizon = self.store.max_horizon
         self.tracker = OverlapTracker(host_bw)
         self.cache, self.slots = make_offload_cache(
-            self.store, capacity, eviction, host_bw, tracker=self.tracker)
+            self.store, capacity, eviction, host_bw, tracker=self.tracker,
+            scorer=self.scorer)
         self.stats = EngineStats()
         self._init_layer_compute(layer_compute_s)
         self._tok_emb_np = np.asarray(params["tok_emb"], np.float32)
@@ -448,26 +475,84 @@ class DecodeCore:
         """Submit predicted experts for the lookahead window starting at
         layer ``li_from``. Distance-0 predictions (the next MoE layer) are
         always prefetched — the original single-layer double-buffer. At
-        distance d > 0 a predicted key is prefetched only when the tier it
-        currently resides in needs that much lead time
-        (``store.prefetch_horizon(key) > d``): a tier-3 expert is
-        requested layers earlier than a tier-1 one, whose prediction can
-        wait for the more accurate next-layer pass."""
+        distance d > 0 a predicted key is prefetched only when
+
+        * the tier it currently resides in needs that much lead time
+          (``store.prefetch_horizon(key) > d``): a tier-3 expert is
+          requested layers earlier than a tier-1 one, whose prediction can
+          wait for the more accurate next-layer pass;
+        * its prediction clears ``TierConfig.deep_confidence`` (when set
+          and the policy reports confidences): deep lead time is spent
+          only on keys the predictor is sure about, pruning wasted
+          slow-tier fetches;
+        * the keys *fit*: once a distance's not-yet-resident keys exceed
+          the tier-0 slots left over after the distance-0 working set and
+          the in-flight pins, that distance and everything deeper is
+          dropped and ``horizon_clamps`` counts it — the anti-thrash
+          guard that stops deep prefetch from churning the next layer's
+          own working set at admission-minimum capacity.
+
+        With learned replacement the raw (pre-gating) predictions also
+        feed the ReuseDistanceScorer: every predicted (key, distance)
+        doubles as a predicted-next-use estimate for eviction."""
         if policy is None:
             return
         mis = self._moe_window(li_from)
         if not mis:
             return
-        if len(mis) == 1:
+        scored = (self.scorer is not None
+                  or self._conf_threshold is not None)
+        if scored:
+            preds = policy.predict_batch_multi_scored(rids, ts, mis)
+        elif len(mis) == 1:
             preds = {mis[0]: policy.predict_batch(rids, ts, mis[0])}
         else:
             preds = policy.predict_batch_multi(rids, ts, mis)
+        # pass 1: record the WHOLE window into the scorer and decide what
+        # fits, before any insertion — the d0 prefetch's evictions must see
+        # the deeper layers' predicted distances, not last cycle's stale
+        # ones. Records are information and are never clamped; only the
+        # insertions are.
+        plan = []
+        deep_budget, clamped = 0, False
         for d, mi in enumerate(mis):
+            rows = []
             for pred in preds[mi]:
+                conf = None
+                if scored:
+                    pred, conf = pred
                 keys = [(mi, int(e)) for e in pred]
+                if self.scorer is not None and keys:
+                    self.scorer.record(keys, distance=d)
                 if d > 0:
-                    keys = [k for k in keys
-                            if self.store.prefetch_horizon(k) > d]
+                    kept = []
+                    for i, k in enumerate(keys):
+                        if self.store.prefetch_horizon(k) <= d:
+                            continue
+                        if (self._conf_threshold is not None
+                                and conf is not None
+                                and conf[i] < self._conf_threshold):
+                            continue
+                        kept.append(k)
+                    keys = kept
+                rows.append(keys)
+            if d == 0:
+                d0 = {k for keys in rows for k in keys}
+                deep_budget = max(0, self.cache.capacity - len(d0)
+                                  - len(self.cache._pins))
+                plan.append((d, rows))
+            elif not clamped:
+                new = {k for keys in rows for k in keys
+                       if k not in self.cache}
+                if len(new) > deep_budget:
+                    self.stats.horizon_clamps += 1
+                    clamped = True      # this distance and deeper dropped
+                else:
+                    deep_budget -= len(new)
+                    plan.append((d, rows))
+        # pass 2: submit what fits
+        for d, rows in plan:
+            for keys in rows:
                 if keys:
                     self.cache.prefetch(keys, horizon=d)
 
@@ -505,6 +590,8 @@ class DecodeCore:
         for key in pinned:
             self.cache.unpin(key)
         self._advance(self.moe_layers[mi], 1)     # the expert-FFN half
+        if self.scorer is not None:
+            self.scorer.tick()    # one MoE layer computed == one clock unit
         return x, gts
 
     def _sync_stats(self):
@@ -516,6 +603,8 @@ class DecodeCore:
         self.stats.overlapped_by_tier = dict(self.tracker.overlapped_by_tier)
         self.stats.deep_prefetch_hits = self.cache.stats.deep_prefetch_hits
         self.stats.fetches_deduped = self.tracker.fetches_deduped
+        self.stats.evictions_learned = self.cache.stats.evictions_learned
+        self.stats.evictions_lru = self.cache.stats.evictions_lru
         st = getattr(self.store, "stats", None)
         if st is not None:
             self.stats.fetches_by_tier = dict(st.fetches_by_tier)

@@ -79,6 +79,21 @@ class TierConfig:
         tier-``t`` expert is prefetched; the default scales lookahead with
         tier depth and ``(1, 1, 1, 1)`` is the fixed-horizon baseline the
         benchmark compares against.
+      * ``deep_confidence`` — per-key learned gate on deep prefetch: a key
+        predicted more than one MoE layer ahead is only fetched early when
+        the predictor's confidence (sigmoid probability) for it is at
+        least this threshold, pruning wasted deep fetches while keeping
+        the stall hiding. ``None`` (default) keeps the purely tier-static
+        gate; policies without a confidence notion pass the gate
+        unchanged. Applies *on top of* the per-tier ``horizons`` depth.
+      * ``cold_dtype`` — storage dtype of the cold tiers (2: peer shards,
+        3: disk spill). ``"int8"`` stores/ships cold experts quantized
+        (per-output-channel absmax scales, quantize at placement/demote,
+        dequantize on promote), shrinking the spill memmap and cutting
+        peer/disk fetch bytes and modeled transfer time — at the cost of
+        bit-exactness: token streams may diverge from the full-precision
+        reference, so it is opt-in. ``None`` (default) keeps every tier
+        bit-exact and stream-parity-pinned.
     """
     num_shards: int = 1
     local_shard: int = 0
@@ -92,6 +107,8 @@ class TierConfig:
     vnodes: int = 64
     seed: int = 0
     horizons: Tuple[int, int, int, int] = (1, 1, 2, 3)
+    deep_confidence: Optional[float] = None
+    cold_dtype: Optional[str] = None
 
     def tier_duration(self, tier: int, nbytes: int) -> Optional[float]:
         """Modeled transfer time for an ``nbytes`` fetch from ``tier`` into
@@ -158,13 +175,33 @@ class ConsistentHashRing:
 
 @dataclass
 class StoreStats:
-    """Per-tier fetch traffic + residency churn."""
+    """Per-tier fetch traffic + residency churn.
+
+      * ``fetches_by_tier`` / ``bytes_by_tier`` — fetch counts and bytes
+        served per source tier (cold-tier bytes are the quantized wire
+        size when ``cold_dtype`` is set).
+      * ``promotions`` — tier-1 cached copies inserted on access.
+      * ``demotions`` — tier-0 evictions absorbed into tier 1.
+      * ``cache_evictions`` — tier-1 cached copies dropped (home remains).
+      * ``cache_evictions_learned`` — tier-1 evictions whose victim choice
+        was informed by a live reuse-distance prediction (learned
+        replacement active and at least one candidate scored).
+      * ``cache_evictions_lru`` — tier-1 evictions that fell back to pure
+        LRU order under learned replacement (no candidate had a
+        prediction).
+      * ``quantized_fetches`` — fetches served from int8 cold storage
+        (dequantized on the way up).
+      * ``spilled_experts`` — experts homed on disk at placement time.
+    """
     fetches_by_tier: Dict[int, int] = field(default_factory=dict)
     bytes_by_tier: Dict[int, int] = field(default_factory=dict)
-    promotions: int = 0        # tier-1 cached copies inserted on access
-    demotions: int = 0         # tier-0 evictions absorbed into tier 1
-    cache_evictions: int = 0   # tier-1 cached copies dropped (home remains)
-    spilled_experts: int = 0   # experts homed on disk at placement time
+    promotions: int = 0
+    demotions: int = 0
+    cache_evictions: int = 0
+    cache_evictions_learned: int = 0
+    cache_evictions_lru: int = 0
+    quantized_fetches: int = 0
+    spilled_experts: int = 0
 
     def count(self, tier: int, nbytes: int) -> None:
         self.fetches_by_tier[tier] = self.fetches_by_tier.get(tier, 0) + 1
@@ -274,15 +311,28 @@ class TieredExpertStore:
     """
 
     def __init__(self, expert_params_per_layer, tc: TierConfig,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None, scorer=None):
         assert tc.num_shards >= 1
         assert 0 <= tc.local_shard < tc.num_shards
         assert len(tc.horizons) == 4 and min(tc.horizons) >= 1
+        assert tc.cold_dtype in (None, "int8"), \
+            f"unsupported cold_dtype {tc.cold_dtype!r}"
         self.base = HostExpertStore(expert_params_per_layer)
         self.tc = tc
+        # learned tier-1 replacement: when a ReuseDistanceScorer is wired
+        # in, cache eviction picks the copy predicted furthest from reuse
+        # (LRU as tiebreak/fallback) instead of pure recency order
+        self.scorer = scorer
         self.num_layers = self.base.num_layers
         self.num_experts = self.base.num_experts
         self.bytes_per_expert = self.base.bytes_per_expert
+        # wire/storage size of one cold-tier expert: int8 payload plus one
+        # f32 absmax scale per output channel of each of the 3 matrices
+        lp = self.base.layers[0]
+        self.cold_bytes_per_expert = sum(
+            int(np.prod(lp[k][0].shape)) + lp[k][0].shape[-1] * 4
+            for k in ("w_gate", "w_up", "w_down"))
+        self._wdtype = lp["w_gate"].dtype
         self.max_horizon = max(tc.horizons)
         self.ring = ConsistentHashRing(range(tc.num_shards), tc.vnodes,
                                        tc.seed)
@@ -315,6 +365,9 @@ class TieredExpertStore:
                     spilled.append(key)
         self._spill_row: Dict[Key, int] = {k: i
                                            for i, k in enumerate(spilled)}
+        # quantized copies of peer-homed experts, built lazily on first
+        # fetch (the peer "stores" them int8; the transfer ships int8)
+        self._cold: Dict[Key, tuple] = {}
         self._spill = self._build_spill(spilled, spill_dir)
         for key, shard in self.home_shard.items():
             if key in self._spill_row:
@@ -328,6 +381,7 @@ class TieredExpertStore:
 
     def _build_spill(self, spilled: Sequence[Key],
                      spill_dir: Optional[str]):
+        self._spill_scales: Dict[Key, tuple] = {}
         if not spilled:
             self._spill_path = None
             return None
@@ -339,13 +393,50 @@ class TieredExpertStore:
                                     dir=spill_dir, prefix="tier3_")
         os.close(fd)
         self._spill_path = path
-        mm = np.memmap(path, dtype=wg0.dtype, mode="w+",
+        cold = self.tc.cold_dtype is not None
+        # int8 cold storage: the memmap holds quantized rows (1 byte per
+        # element instead of the weight dtype's width); the tiny per-channel
+        # scale vectors stay in RAM — quantize-on-demote to disk happens
+        # here, at placement, since placement IS the demotion to tier 3
+        mm = np.memmap(path, dtype=np.int8 if cold else wg0.dtype,
+                       mode="w+",
                        shape=(len(spilled), int(self._offsets[-1])))
         for i, key in enumerate(spilled):
-            for j, w in enumerate(self.base.get(key)):
+            ws = self.base.get(key)
+            if cold:
+                ws, scales = self._quantize(ws)
+                self._spill_scales[key] = scales
+            for j, w in enumerate(ws):
                 mm[i, self._offsets[j]: self._offsets[j + 1]] = w.reshape(-1)
         mm.flush()
         return mm
+
+    # -- cold-tier quantization --------------------------------------------
+    def _quantize(self, ws):
+        """Symmetric int8 with one absmax scale per output channel of each
+        matrix (axis 0 reduced — per ``f`` channel for w_gate/w_up, per
+        ``d`` channel for w_down)."""
+        qs, scales = [], []
+        for w in ws:
+            w = np.asarray(w, np.float32)
+            s = np.max(np.abs(w), axis=0) / 127.0
+            s = np.where(s > 0, s, 1.0).astype(np.float32)
+            qs.append(np.clip(np.rint(w / s), -127, 127).astype(np.int8))
+            scales.append(s)
+        return tuple(qs), tuple(scales)
+
+    def _dequantize(self, qs, scales):
+        return tuple((q.astype(np.float32) * s).astype(self._wdtype)
+                     for q, s in zip(qs, scales))
+
+    def _cold_copy(self, key: Key):
+        """The int8 form a peer shard stores (and ships) for ``key`` —
+        quantized once, cached, so repeat fetches are value-identical."""
+        ent = self._cold.get(key)
+        if ent is None:
+            ent = self._quantize(self.base.get(key))
+            self._cold[key] = ent
+        return ent
 
     def close(self) -> None:
         """Release the spill memmap and unlink its file."""
@@ -365,17 +456,31 @@ class TieredExpertStore:
 
     def _read_spill(self, key: Key):
         """Tier-3 read: pull the expert's rows out of the memmap (copies —
-        this is the actual disk -> DRAM transfer)."""
+        this is the actual disk -> DRAM transfer), dequantizing when the
+        cold tiers store int8."""
         row = self._spill[self._spill_row[key]]
-        return tuple(
+        parts = tuple(
             np.array(row[self._offsets[j]: self._offsets[j + 1]]
                      ).reshape(self._shapes[j])
             for j in range(3))
+        if self.tc.cold_dtype is not None:
+            return self._dequantize(parts, self._spill_scales[key])
+        return parts
+
+    def _is_cold(self, key: Key, tier: int) -> bool:
+        """True when a fetch from ``tier`` ships the quantized form."""
+        return (self.tc.cold_dtype is not None
+                and tier in (TIER_PEER, TIER_DISK))
 
     def _materialize(self, key: Key):
-        """The authoritative bytes, wherever home is (no modeled cost)."""
+        """The authoritative bytes, wherever home is (no modeled cost).
+        With int8 cold tiers the authoritative form of a cold-homed key IS
+        the quantized one — dequantizing here keeps every path that can
+        serve a key value-identical."""
         if key in self._spill_row:
             return self._read_spill(key)
+        if self._is_cold(key, self.ledger.home(key)[1]):
+            return self._dequantize(*self._cold_copy(key))
         return self.base.get(key)
 
     # -- store interface ---------------------------------------------------
@@ -399,7 +504,10 @@ class TieredExpertStore:
 
     def fetch(self, key: Key):
         """(weights, FetchInfo): serve from the fastest resident tier,
-        promoting peer/disk fetches into the tier-1 cache on the way."""
+        promoting peer/disk fetches into the tier-1 cache on the way.
+        With ``cold_dtype="int8"`` a cold-tier fetch moves the quantized
+        bytes (plus scales) and dequantizes on promote — the tier-1 cached
+        copy and the device slot always hold the dequantized form."""
         nbytes = self.bytes_per_expert
         if key in self._cache:
             self._cache.move_to_end(key)
@@ -409,8 +517,13 @@ class TieredExpertStore:
             tier = self.ledger.tier_of(key)
             if tier == TIER_DISK:
                 w = self._read_spill(key)
+            elif self._is_cold(key, tier):
+                w = self._dequantize(*self._cold_copy(key))
             else:
                 w = self.base.get(key)
+            if self._is_cold(key, tier):
+                nbytes = self.cold_bytes_per_expert
+                self.stats.quantized_fetches += 1
             if tier != TIER_HOST and self.tc.cache_experts > 0:
                 self._promote(key, w)
                 self.stats.promotions += 1
@@ -449,14 +562,36 @@ class TieredExpertStore:
         self._shrink_cache()
 
     def _shrink_cache(self) -> None:
-        """LRU-evict unpinned cached copies back to capacity. Pinned
-        entries are skipped — the cache may transiently exceed its cap
-        while every resident copy is pinned."""
+        """Evict unpinned cached copies back to capacity. Pinned entries
+        are skipped — the cache may transiently exceed its cap while every
+        resident copy is pinned. Default order is LRU; with a
+        ReuseDistanceScorer wired in (learned replacement) the victims are
+        the copies predicted furthest from reuse — unscored copies count
+        as infinitely far, LRU order breaks ties, so without predictions
+        the choice degrades to exact LRU."""
         over = len(self._cache) - self.tc.cache_experts
         if over <= 0:
             return
-        for key in [k for k in self._cache
-                    if not self.ledger.pinned(k)][:over]:
+        evictable = [k for k in self._cache
+                     if not self.ledger.pinned(k)]
+        if self.scorer is not None:
+            scored, informed = [], False
+            for i, k in enumerate(evictable):
+                d = self.scorer.distance(k)
+                if d is None:
+                    d = float("inf")
+                else:
+                    informed = True
+                scored.append((-d, i, k))       # furthest first, LRU ties
+            scored.sort()
+            victims = [k for _, _, k in scored[:over]]
+            if informed:
+                self.stats.cache_evictions_learned += len(victims)
+            else:
+                self.stats.cache_evictions_lru += len(victims)
+        else:
+            victims = evictable[:over]
+        for key in victims:
             del self._cache[key]
             self.ledger.drop_copy(key, TIER_HOST)
             self.stats.cache_evictions += 1

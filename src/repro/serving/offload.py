@@ -304,9 +304,14 @@ class SlotBuffer:
 
 def make_offload_cache(store: HostExpertStore, capacity: int,
                        eviction: str = "lru", host_bw: float = 100e9,
-                       tracker: Optional[OverlapTracker] = None):
-    """(ExpertCache, SlotBuffer) wired together."""
+                       tracker: Optional[OverlapTracker] = None,
+                       scorer=None):
+    """(ExpertCache, SlotBuffer) wired together. ``scorer`` (a
+    ``core.policies.ReuseDistanceScorer``) is required for
+    ``eviction="learned"`` — the engine feeds it the multi-horizon
+    prediction window so tier-0 eviction picks the key predicted furthest
+    from reuse."""
     buf = SlotBuffer(store, capacity, host_bw, tracker)
     cache = ExpertCache(capacity, eviction, on_evict=buf.release,
-                        on_insert=buf.fill)
+                        on_insert=buf.fill, scorer=scorer)
     return cache, buf

@@ -174,6 +174,7 @@ class BatchedOffloadEngine:
                                 kernel_backend=kernel_backend,
                                 prefix_cache=prefix_cache,
                                 prefix_cache_blocks=prefix_cache_blocks,
+                                replacement=eviction,
                                 tiers=tiers,
                                 layer_compute_s=layer_compute_s)
         self.serve = serve
@@ -187,8 +188,8 @@ class BatchedOffloadEngine:
         # same bound the decode batch obeys
         self.prefill_chunk = max(1, min(serve.prefill_chunk,
                                         capacity // model.cfg.moe.top_k))
-        self.core = DecodeCore(model, params, capacity, eviction, host_bw,
-                               expert_backend, max_batch=max_batch,
+        self.core = DecodeCore(model, params, capacity, serve.replacement,
+                               host_bw, expert_backend, max_batch=max_batch,
                                layer_compute_s=serve.layer_compute_s,
                                max_prefill_chunk=self.prefill_chunk,
                                kernel=serve.resolve_kernel(),

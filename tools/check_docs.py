@@ -32,6 +32,8 @@ DOCUMENTED_CLASSES = [
     ("repro.serving.engine", "EngineStats"),
     ("repro.serving.kvpool", "PoolStats"),
     ("repro.serving.expertstore", "TierConfig"),
+    ("repro.serving.expertstore", "StoreStats"),
+    ("repro.core.cache", "CacheStats"),
     ("repro.serving.workload", "SLO"),
     ("repro.serving.workload", "PriorityClass"),
     ("repro.serving.workload", "WorkloadRequest"),
