@@ -35,9 +35,11 @@ with disk spill (serving/expertstore.py) — sweeps shard count x tier-0
 capacity reporting per-tier hit rates, the stall-by-tier breakdown, and
 tok/s, then pins horizon-aware prefetch against fixed-horizon at equal
 tier-0 capacity (streams must stay token-identical to the single-host
-engine; horizon-aware must shrink un-overlapped stall):
+engine; horizon-aware must shrink un-overlapped stall). ``--dispatch all``
+adds the fetch/ship/auto compute-dispatch comparison (ship the token group
+to the expert's shard vs pull its weights) in a cold-expert regime:
   PYTHONPATH=src python -m benchmarks.engine_bench --tiny --tiers \
-      --out artifacts/engine_bench_tiers.json
+      --dispatch all --out artifacts/engine_bench_tiers.json
 
 SLO mode (--slo): an open-loop Poisson load sweep (serving/workload.py) of
 an interactive class (urgent, tight TTFT SLO) mixed with long batch
@@ -275,7 +277,8 @@ def _prefix_sharing(model, params, cfg, prompts, shared_len: int,
 
 def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
                 batch: int, replacement: str = "both",
-                cold_dtype: str = "both", log=print):
+                cold_dtype: str = "both", dispatch: str = "fetch",
+                log=print):
     """Tiered expert store under load: shard count x tier-0 capacity sweep
     (per-tier hit rates, stall-by-tier, tok/s), then horizon-aware vs
     fixed-horizon prefetch at equal tier-0 capacity, then learned-vs-LRU
@@ -291,7 +294,12 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
 
     ``replacement`` in {"lru", "learned", "both"} picks the eviction
     policies swept; ``cold_dtype`` in {"none", "int8", "both"} picks the
-    cold-tier storage comparison."""
+    cold-tier storage comparison; ``dispatch`` in {"fetch", "ship",
+    "auto", "all"} additionally compares compute-dispatch modes in a
+    cold-expert regime (no tier-1 promotion cache, slow interconnect,
+    equal tier-0 capacity): ships vs fetches, wire bytes down each path,
+    and un-overlapped stall — asserting auto strictly beats fetch-only
+    on stall with token-identical streams."""
     from repro.core.policies import NextLayerAllPolicy
     from repro.core.tracing import moe_layer_ids
     from repro.launch.dryrun import decode_layer_roofline
@@ -486,6 +494,72 @@ def _tier_sweep(model, params, cfg, prompts, max_new: int, cache_len: int,
             "full_fetch_bytes_t23": b_full,
             "cold_fetch_bytes_ratio_t23": ratio,
             "cold_streams_match": cold["streams_match_ref"],
+        }
+
+    # fetch vs ship vs auto compute dispatch in a cold-expert regime: no
+    # tier-1 promotion cache, tier-0 sized to the bare demand window, and
+    # an interconnect where one peer weight pull costs ~1.2 layers of
+    # compute — every peer expert is a fresh per-(expert, token-count)
+    # decision between pulling its weights and shipping its token group.
+    if dispatch != "fetch":
+        modes = (("fetch", "ship", "auto") if dispatch == "all"
+                 else ("fetch", dispatch))
+        dcap = min_cap
+        dur_peer = 1.2 * mean_layer
+        disp = {}
+        log(f"  dispatch comparison (4 shards, cap {dcap}, cold peers): "
+            "mode,tok_s,ships,fetches,ship_wire_KiB,fetch_wire_MiB,"
+            "stall_ms")
+        for mode in modes:
+            tc = TierConfig(num_shards=4, cache_experts=0,
+                            peer_latency_s=0.3 * dur_peer,
+                            peer_bw=expert_bytes / (0.7 * dur_peer),
+                            dispatch=mode)
+            eng = BatchedOffloadEngine(model, params, pol, dcap,
+                                       host_bw=host_bw, max_batch=batch,
+                                       layer_compute_s="roofline",
+                                       tiers=tc)
+            t0 = time.perf_counter()
+            out = eng.generate(prompts, max_new=max_new,
+                               cache_len=cache_len)
+            wall = time.perf_counter() - t0
+            assert out == ref_out, \
+                f"dispatch={mode} changed a token stream"
+            s = eng.stats
+            row = dict(eng.dispatch_summary())
+            row.update({
+                "tok_s": s.tokens / max(wall, 1e-9),
+                "sim_stall_ms": s.sim_stall_s * 1e3,
+                "stall_by_tier_ms": {t: v * 1e3
+                                     for t, v in s.stall_by_tier.items()},
+                "streams_match_ref": True,
+            })
+            disp[mode] = row
+            eng.core.store.close()
+            log(f"  {mode},{row['tok_s']:.1f},{row['ships']},"
+                f"{row['fetches']},{row['ship_wire_bytes'] / 2**10:.1f},"
+                f"{row['fetch_wire_bytes'] / 2**20:.2f},"
+                f"{row['sim_stall_ms']:.2f}")
+        for mode in modes[1:]:
+            assert disp[mode]["ships"] > 0, f"{mode} mode never shipped"
+        if "auto" in disp:
+            # the acceptance: at equal tier-0 capacity, pricing fetch vs
+            # ship per (expert, token-count) strictly cuts un-overlapped
+            # stall vs always pulling weights
+            assert (disp["auto"]["sim_stall_ms"]
+                    < disp["fetch"]["sim_stall_ms"]), \
+                "auto dispatch did not reduce stall vs fetch-only"
+            red = 1.0 - (disp["auto"]["sim_stall_ms"]
+                         / max(disp["fetch"]["sim_stall_ms"], 1e-12))
+            log(f"  auto vs fetch-only: stall "
+                f"{disp['fetch']['sim_stall_ms']:.2f} -> "
+                f"{disp['auto']['sim_stall_ms']:.2f} ms ({red:.1%} less)")
+            results["dispatch_stall_reduction"] = red
+        results["dispatch_comparison"] = {
+            "tier0_capacity": dcap,
+            "modes": list(modes),
+            "streams_identical": True,
+            **disp,
         }
     return results
 
@@ -758,7 +832,7 @@ def _longctx_sweep(model, params, cfg, lengths, batch: int, block_size: int,
 
 
 def _run_tiers(out_path=None, replacement="both", cold_dtype="both",
-               log=print):
+               dispatch="fetch", log=print):
     """Build the untrained reduced backbone (stream parity + modeled stall
     only — prediction quality is the policy benches' job), run the tier
     sweep, write the artifact."""
@@ -776,7 +850,8 @@ def _run_tiers(out_path=None, replacement="both", cold_dtype="both",
     prompts = sample_prompts(corpus, 6, 8, seed=2)
     results = _tier_sweep(model, params, cfg, prompts, max_new=6,
                           cache_len=32, batch=4, replacement=replacement,
-                          cold_dtype=cold_dtype, log=log)
+                          cold_dtype=cold_dtype, dispatch=dispatch,
+                          log=log)
     results["wall_s"] = time.time() - t0
     if out_path:
         os.makedirs(os.path.dirname(os.path.abspath(out_path)),
@@ -856,7 +931,7 @@ def run(log=print):
 
 def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
              tiers=False, slo=False, replacement="both", cold_dtype="both",
-             log=print):
+             dispatch="fetch", log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
     ragged-length admission-latency / memory-high-water workload;
@@ -881,7 +956,8 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
                             out_path=out_path, log=log)
     if tiers:
         return _run_tiers(out_path=out_path, replacement=replacement,
-                          cold_dtype=cold_dtype, log=log)
+                          cold_dtype=cold_dtype, dispatch=dispatch,
+                          log=log)
     if slo:
         return _run_slo(n_requests=16, load_factors=(0.4, 1.5, 4.0),
                         out_path=out_path, log=log)
@@ -986,6 +1062,13 @@ def main():
                     help="--tiers only: cold-tier (peer/disk) storage "
                          "dtype comparison; int8 halves fetch bytes but "
                          "is lossy")
+    ap.add_argument("--dispatch", choices=("fetch", "ship", "auto", "all"),
+                    default="fetch",
+                    help="--tiers only: compute-dispatch modes to compare "
+                         "in a cold-expert regime (ship = send the token "
+                         "group to the expert's shard instead of pulling "
+                         "its weights; auto = roofline-priced per "
+                         "(expert, token-count))")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
     if args.longctx and not args.tiny:
@@ -997,7 +1080,8 @@ def main():
     elif args.tiny or args.mixed or args.prefix or args.tiers or args.slo:
         run_tiny(args.out, mixed=args.mixed, longctx=args.longctx,
                  prefix=args.prefix, tiers=args.tiers, slo=args.slo,
-                 replacement=args.replacement, cold_dtype=args.cold_dtype)
+                 replacement=args.replacement, cold_dtype=args.cold_dtype,
+                 dispatch=args.dispatch)
     else:
         results = run()
         if args.out:

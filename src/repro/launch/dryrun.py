@@ -135,6 +135,28 @@ def decode_layer_roofline(cfg, batch: int = 1, cache_len: int = 1024,
     return out
 
 
+def expert_ffn_roofline(cfg, peak_flops: float = PEAK_FLOPS_BF16,
+                        hbm_bw: float = HBM_BW):
+    """``(per_token_s, base_s)`` roofline terms for ONE expert's FFN
+    computed remotely (the ship half of the fetch-vs-ship decision,
+    serving/expertstore.DispatchPlanner).
+
+    ``per_token_s`` is the matvec flops leg — ``2 * 3*d*d_ff_expert /
+    peak`` per shipped token; ``base_s`` is the token-independent leg —
+    the peer streaming the expert's weights from its own DRAM once
+    (``3*d*d_ff_expert * itemsize / hbm_bw``). Same parameter-count and
+    max(flops, bytes)-free split as :func:`decode_layer_roofline`'s MoE
+    branch, factored per expert: at decode token counts the weight read
+    dominates, which is exactly why shipping a few tokens beats fetching
+    weights over a much slower interconnect.
+    """
+    m = cfg.moe
+    assert m is not None, "expert_ffn_roofline needs an MoE config"
+    per = 3 * cfg.d_model * m.d_ff_expert
+    dt = jnp.dtype(cfg.dtype).itemsize
+    return 2 * per / peak_flops, per * dt / hbm_bw
+
+
 def build_step(arch: str, shape_name: str, mesh, cfg_transform=None,
                microbatch: int = 1):
     """Returns (step_fn, example_args (abstract), in_shardings, donate)."""

@@ -161,6 +161,69 @@ def shard_decode_state(cfg: ModelConfig, abstract_state, mesh) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def expert_dispatch_ffn(mesh, wg, wu, wd, x_send, eid_send):
+    """Expert-parallel compute dispatch: ship ``(tokens, expert_id)``
+    groups across a 1-D ``("expert",)`` mesh (launch/mesh.make_expert_mesh)
+    with a real ``lax.all_to_all``, compute each token's expert FFN on the
+    shard that *owns* the expert, and return the outputs to the sender —
+    the multi-device ground truth of the serving engines' modeled ship
+    path (``TierConfig.dispatch``), runnable on CPU under
+    ``--xla_force_host_platform_device_count``.
+
+    wg/wu: (E, D, F); wd: (E, F, D) — expert-sharded, ``E`` divisible by
+    the mesh's ``S`` shards, shard ``s`` owning global experts
+    ``[s*E/S, (s+1)*E/S)``. ``x_send``: (S, S, C, D) send buffers —
+    ``x_send[s, d, c]`` is source shard ``s``'s c-th token for destination
+    shard ``d``; ``eid_send``: (S, S, C) int32 global expert ids aligned
+    with it, ``-1`` marking padding slots (their outputs are zeroed).
+    Every non-padding ``eid_send[s, d]`` entry must name an expert homed
+    on shard ``d``. Returns (S, S, C, D): ``out[s, d, c]`` is the expert
+    output for ``x_send[s, d, c]``, back on the source shard, unweighted
+    (the caller applies the router's combine weights, exactly like
+    :func:`repro.models.moe.expert_group_ffn`). f32 accumulation, output
+    in ``x_send.dtype``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax import lax
+
+    s_mesh = _axis_size(mesh, "expert")
+    e_local = wg.shape[0] // s_mesh
+    assert wg.shape[0] % s_mesh == 0, \
+        f"num_experts {wg.shape[0]} not divisible by {s_mesh} shards"
+    assert x_send.shape[0] == s_mesh and x_send.shape[1] == s_mesh
+
+    def body(wg_l, wu_l, wd_l, xs, es):
+        # wg_l/wu_l: (E/S, D, F); wd_l: (E/S, F, D) — this shard's experts
+        # xs: (1, S, C, D); es: (1, S, C) — this shard's send buffers
+        xs, es = xs[0], es[0]
+        # dispatch: row d of the send buffer goes to shard d; afterwards
+        # row j holds what shard j sent HERE
+        xr = lax.all_to_all(xs, "expert", split_axis=0, concat_axis=0,
+                            tiled=True)
+        er = lax.all_to_all(es, "expert", split_axis=0, concat_axis=0,
+                            tiled=True)
+        shard = lax.axis_index("expert")
+        le = jnp.clip(er - shard * e_local, 0, e_local - 1)   # (S, C)
+        g_sel = jnp.take(wg_l, le, axis=0).astype(jnp.float32)
+        u_sel = jnp.take(wu_l, le, axis=0).astype(jnp.float32)
+        d_sel = jnp.take(wd_l, le, axis=0).astype(jnp.float32)
+        xf = xr.astype(jnp.float32)
+        g = jnp.einsum("scd,scdf->scf", xf, g_sel)
+        u = jnp.einsum("scd,scdf->scf", xf, u_sel)
+        y = jnp.einsum("scf,scfd->scd", jax.nn.silu(g) * u, d_sel)
+        y = jnp.where((er >= 0)[..., None], y, 0.0).astype(xs.dtype)
+        # return trip: row j goes back to source shard j
+        yr = lax.all_to_all(y, "expert", split_axis=0, concat_axis=0,
+                            tiled=True)
+        return yr[None]
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("expert"), P("expert"), P("expert"),
+                  P("expert"), P("expert")),
+        out_specs=P("expert"))(wg, wu, wd, x_send, eid_send)
+
+
 def act_sharding(cfg: ModelConfig, shape_name: str, mesh):
     """Between-layer activation constraint (B, T, D): batch on data,
     sequence on model (Megatron-style sequence parallelism)."""

@@ -91,6 +91,25 @@ def moe_gather_apply(p, cfg, x, w, idx):
     return y
 
 
+def expert_group_ffn(wg, wu, wd, x):
+    """ONE expert's SwiGLU FFN over a shipped token group — the unit of
+    work a peer shard computes in the expert-parallel dispatch path
+    (launch/sharding.expert_dispatch_ffn; serving engines model the same
+    computation through their slot-gather program).
+
+    wg/wu: (D, F); wd: (F, D); x: (N, D) token activations. Returns the
+    (N, D) *unweighted* expert outputs — the router's top-k combine
+    weights are applied by the caller after the outputs return, so the
+    weighted sum happens exactly where the local path does it.
+    Accumulates in f32 (matching the reference kernels), returns x.dtype.
+    """
+    xf = x.astype(jnp.float32)
+    g = xf @ wg.astype(jnp.float32)
+    u = xf @ wu.astype(jnp.float32)
+    y = (jax.nn.silu(g) * u) @ wd.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
 def moe_apply(p, cfg, x, group_tokens: int = 0, decode: bool = False):
     """x: (B,T,D) -> (out, aux_loss, expert_idx (B,T,k))."""
     m = cfg.moe

@@ -66,7 +66,13 @@ class ServeConfig:
         hierarchy: consistent-hash expert->shard placement, per-tier
         bandwidth/latency fetch channels, and horizon-aware prefetch whose
         lookahead depth scales with the tier a predicted expert resides
-        in. ``None`` keeps one host's DRAM holding every expert.
+        in. ``None`` keeps one host's DRAM holding every expert. The
+        carried ``TierConfig.dispatch`` mode (``"fetch"``/``"ship"``/
+        ``"auto"``) additionally chooses, per (expert, token-count), between
+        pulling a peer-resident expert's weights and shipping the token
+        group to the peer for remote compute — priced by the
+        :class:`~repro.serving.expertstore.DispatchPlanner` roofline;
+        streams stay token-identical across modes.
       * ``layer_compute_s`` drives the OverlapTracker's modeled compute
         clock: a float (seconds per layer) is the legacy uniform knob;
         ``"roofline"`` derives per-layer times from the dry-run's analytic

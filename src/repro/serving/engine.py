@@ -48,8 +48,9 @@ from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import transformer as T
 from repro.models.common import ffn_apply, rms_norm
-from repro.serving.offload import (TIER_HOST, HostExpertStore,
-                                   OverlapTracker, make_offload_cache)
+from repro.serving.offload import (CHANNEL_SHIP, TIER_HOST, TIER_PEER,
+                                   HostExpertStore, OverlapTracker,
+                                   make_offload_cache)
 
 
 def unstack_layers(cfg, params) -> List[dict]:
@@ -126,7 +127,10 @@ class EngineStats:
 
     Tier breakdowns (tiered expert store; single-host engines report
     everything under tier 1; keys are storage tiers: 1 = local host DRAM,
-    2 = peer-host shard over the interconnect, 3 = disk/mmap):
+    2 = peer-host shard over the interconnect, 3 = disk/mmap, 4 = the
+    compute-dispatch *ship* channel — token round trips to peer-resident
+    experts, so "waiting on remote compute" is attributed separately from
+    "waiting on weights"):
       * ``stall_by_tier`` — un-overlapped modeled stall seconds attributed
         to the tier whose transfer finished last (the critical path).
       * ``overlapped_by_tier`` — hidden transfer seconds per tier.
@@ -139,6 +143,15 @@ class EngineStats:
         in flight on the same tier channel (the slot was released before
         the modeled transfer completed, then the key was demanded again):
         no second transfer is queued and no bytes are re-charged.
+
+    Compute dispatch (``TierConfig.dispatch`` = ``"ship"``/``"auto"``;
+    zero in fetch-only engines):
+      * ``ships`` — expert groups computed remotely: the token batch was
+        shipped to the peer shard holding the expert instead of the
+        expert's weights being fetched (no tier-0 insert, no cache churn).
+      * ``ship_bytes`` — activation bytes shipped over the interconnect
+        (tokens out + FFN outputs back; compare ``fetch_bytes``).
+      * ``ship_tokens`` — tokens computed remotely across all ships.
 
     Learned replacement & horizon control:
       * ``evictions_learned`` / ``evictions_lru`` — with
@@ -178,6 +191,9 @@ class EngineStats:
     evictions_learned: int = 0
     evictions_lru: int = 0
     horizon_clamps: int = 0
+    ships: int = 0
+    ship_bytes: int = 0
+    ship_tokens: int = 0
     latency: Optional[LatencyStats] = None
 
     @property
@@ -247,13 +263,37 @@ class DecodeCore:
                                            scorer=self.scorer)
         else:
             self.store = HostExpertStore(store_layers)
+        # compute dispatch (TierConfig.dispatch = "ship"/"auto"): price
+        # fetch-vs-ship per (expert, token-count) off the same roofline
+        # constants the compute clock uses. weight_bytes is the WIRE size
+        # of a peer fetch — the quantized cold size under int8 cold tiers,
+        # where a ship runs against the dequantized peer copy instead.
+        self.planner = None
+        if tiers is not None and tiers.dispatch != "fetch":
+            from repro.launch.dryrun import expert_ffn_roofline
+            from repro.serving.expertstore import DispatchPlanner
+            per_tok_s, base_s = expert_ffn_roofline(cfg)
+            wire_w = (self.store.cold_bytes_per_expert
+                      if tiers.cold_dtype is not None
+                      else self.store.bytes_per_expert)
+            self.planner = DispatchPlanner(
+                weight_bytes=wire_w,
+                act_bytes_per_token=2 * cfg.d_model
+                * jnp.dtype(cfg.dtype).itemsize,
+                ffn_s_per_token=per_tok_s, ffn_s_base=base_s,
+                peer_latency_s=tiers.peer_latency_s,
+                peer_bw=tiers.peer_bw, mode=tiers.dispatch)
         # how many MoE layers ahead predictions are asked for: the store's
         # deepest tier decides (single host -> 1, the original behaviour)
         self.max_horizon = self.store.max_horizon
         self.tracker = OverlapTracker(host_bw)
+        # a step's units can route to at most units*top_k distinct experts,
+        # which bounds how many ephemeral ship rows one program may stage
+        ship_slots = (max(max_batch, max_prefill_chunk) * cfg.moe.top_k
+                      if self.planner is not None else 0)
         self.cache, self.slots = make_offload_cache(
             self.store, capacity, eviction, host_bw, tracker=self.tracker,
-            scorer=self.scorer)
+            scorer=self.scorer, ship_slots=ship_slots)
         self.stats = EngineStats()
         self._init_layer_compute(layer_compute_s)
         self._tok_emb_np = np.asarray(params["tok_emb"], np.float32)
@@ -494,7 +534,15 @@ class DecodeCore:
 
         With learned replacement the raw (pre-gating) predictions also
         feed the ReuseDistanceScorer: every predicted (key, distance)
-        doubles as a predicted-next-use estimate for eviction."""
+        doubles as a predicted-next-use estimate for eviction.
+
+        With compute dispatch active ("ship"/"auto") a predicted
+        peer-resident key the planner prices cheaper to *ship* (estimated
+        token count = how many prediction rows name it) is not prefetched
+        at any distance: pulling its weights would be exactly the cache
+        thrash the ship path exists to avoid. The demand-time decision in
+        ``_moe_units`` stays authoritative — if the router sends more
+        tokens than predicted, the planner re-prices and may fetch."""
         if policy is None:
             return
         mis = self._moe_window(li_from)
@@ -517,6 +565,12 @@ class DecodeCore:
         deep_budget, clamped = 0, False
         for d, mi in enumerate(mis):
             rows = []
+            if self.planner is not None:
+                mult: Dict = {}
+                for pred in preds[mi]:
+                    for e in (pred[0] if scored else pred):
+                        k = (mi, int(e))
+                        mult[k] = mult.get(k, 0) + 1
             for pred in preds[mi]:
                 conf = None
                 if scored:
@@ -524,6 +578,14 @@ class DecodeCore:
                 keys = [(mi, int(e)) for e in pred]
                 if self.scorer is not None and keys:
                     self.scorer.record(keys, distance=d)
+                if self.planner is not None:
+                    keep = [i for i, k in enumerate(keys)
+                            if k in self.cache
+                            or self.store.tier_of(k) != TIER_PEER
+                            or self.planner.choose(mult[k]) != "ship"]
+                    keys = [keys[i] for i in keep]
+                    if conf is not None:
+                        conf = [conf[i] for i in keep]
                 if d > 0:
                     kept = []
                     for i, k in enumerate(keys):
@@ -565,13 +627,45 @@ class DecodeCore:
         tokens of one prefill chunk. h/w/x: (U,1,...) device arrays (pad
         units included); idx_np: (U,k); only the first n_real units touch
         the cache. Returns (x_out, per-live-unit ground-truth sets).
+
+        Compute dispatch: with a DispatchPlanner active, each demanded
+        expert that is neither tier-0 resident nor findable locally —
+        i.e. would be a peer fetch — is priced fetch-vs-ship on its token
+        count. Shipped experts bypass the ExpertCache entirely (no
+        access, no insert, no pin): their weights are staged in ephemeral
+        slot rows modeling the peer's copy, the round trip is charged to
+        the ship channel, and the SAME jitted slot-gather program computes
+        them — so streams stay token-identical while tier 0 is untouched.
         """
+        ship_slot: Dict = {}
+        if self.planner is not None:
+            tok_count: Dict = {}
+            for i in range(n_real):
+                for e in np.unique(idx_np[i]):
+                    key = (mi, int(e))
+                    tok_count[key] = tok_count.get(key, 0) + 1
+            for key, n_tok in sorted(tok_count.items()):
+                if key in self.cache:
+                    continue            # tier-0 resident: just compute
+                if self.store.tier_of(key) != TIER_PEER:
+                    continue            # local/disk: fetch path owns it
+                if self.planner.choose(n_tok) != "ship":
+                    continue
+                wire = self.planner.ship_bytes(n_tok)
+                peer_w = self.store.ship(key, n_tok, wire)
+                ship_slot[key] = self.slots.fill_ship(len(ship_slot),
+                                                      peer_w)
+                self.tracker.submit(key, wire, tier=CHANNEL_SHIP,
+                                    duration=self.planner.ship_s(n_tok),
+                                    coalesce=False)
         gts, pinned = [], []
         for i in range(n_real):                   # live units only
             gt = np.unique(idx_np[i])
             gts.append(gt)
             for e in gt:
                 key = (mi, int(e))
+                if key in ship_slot:
+                    continue            # computed remotely this step
                 hit = self.cache.access(key)
                 self.stats.hits += int(hit)
                 self.stats.misses += int(not hit)
@@ -581,9 +675,11 @@ class DecodeCore:
                 pinned.append(key)
         self.tracker.wait({(mi, int(e)) for gt in gts for e in gt})
         slot_idx = np.zeros(idx_np.shape, np.int32)
+        slot_table = self.slots.slot_of
         for i in range(n_real):
-            slot_idx[i] = self.slots.slot_ids(
-                [(mi, int(e)) for e in idx_np[i]])
+            slot_idx[i] = [
+                ship_slot[key] if key in ship_slot else slot_table[key]
+                for key in ((mi, int(e)) for e in idx_np[i])]
         x = self._expert(h, w, jnp.asarray(slot_idx), self.slots.w_gate,
                          self.slots.w_up, self.slots.w_down,
                          lp["moe"].get("shared"), x)
@@ -609,6 +705,9 @@ class DecodeCore:
         if st is not None:
             self.stats.fetches_by_tier = dict(st.fetches_by_tier)
             self.stats.fetch_bytes_by_tier = dict(st.bytes_by_tier)
+            self.stats.ships = st.ships
+            self.stats.ship_bytes = st.ship_bytes
+            self.stats.ship_tokens = st.ship_tokens
         elif self.slots.fetch_count:
             self.stats.fetches_by_tier = {TIER_HOST: self.slots.fetch_count}
             self.stats.fetch_bytes_by_tier = {TIER_HOST:

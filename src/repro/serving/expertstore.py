@@ -94,6 +94,18 @@ class TierConfig:
         bit-exactness: token streams may diverge from the full-precision
         reference, so it is opt-in. ``None`` (default) keeps every tier
         bit-exact and stream-parity-pinned.
+      * ``dispatch`` — how the engine satisfies a peer-resident (tier-2)
+        expert: ``"fetch"`` (default) always pulls the weights through the
+        interconnect; ``"ship"`` always sends the token activations to the
+        peer, computes the expert FFN there, and returns the outputs;
+        ``"auto"`` picks the cheaper path per (expert, token-count) from
+        the :class:`DispatchPlanner` roofline. Streams are token-identical
+        across all three modes: a ship computes with the same weights the
+        peer would have served, through the same jitted expert program.
+        With ``cold_dtype="int8"`` a ship runs against the peer's
+        *dequantized* cold copy — the exact bytes a fetch would deliver —
+        so the int8 logit deviation is identical whichever path ``auto``
+        picks.
     """
     num_shards: int = 1
     local_shard: int = 0
@@ -109,6 +121,7 @@ class TierConfig:
     horizons: Tuple[int, int, int, int] = (1, 1, 2, 3)
     deep_confidence: Optional[float] = None
     cold_dtype: Optional[str] = None
+    dispatch: str = "fetch"
 
     def tier_duration(self, tier: int, nbytes: int) -> Optional[float]:
         """Modeled transfer time for an ``nbytes`` fetch from ``tier`` into
@@ -119,6 +132,71 @@ class TierConfig:
         if tier == TIER_PEER:
             return self.peer_latency_s + nbytes / self.peer_bw
         return self.disk_latency_s + nbytes / self.disk_bw
+
+
+@dataclass(frozen=True)
+class DispatchPlanner:
+    """Roofline cost model behind the per-(expert, token-count) fetch-vs-
+    ship decision (``TierConfig.dispatch``).
+
+    Both paths pay the interconnect latency once. Beyond that:
+
+      * ``fetch`` moves the expert's weights — ``weight_bytes`` over
+        ``peer_bw`` (``weight_bytes`` is the *wire* size: the quantized
+        cold size when ``cold_dtype`` is set);
+      * ``ship`` moves ``tokens * act_bytes_per_token`` activation bytes
+        (the token vectors out plus the FFN outputs back: 2 * d_model *
+        itemsize each token) and buys the peer's expert-FFN compute —
+        ``ffn_s_base`` (the peer streaming the expert's weights from its
+        own DRAM once) plus ``tokens * ffn_s_per_token`` (matvec flops),
+        terms produced by :func:`repro.launch.dryrun.expert_ffn_roofline`.
+
+    Fields:
+      * ``weight_bytes`` — wire bytes of one expert fetch from the peer.
+      * ``act_bytes_per_token`` — round-trip activation bytes per token.
+      * ``ffn_s_per_token`` — remote per-token expert-FFN compute seconds.
+      * ``ffn_s_base`` — remote token-independent seconds (weight read).
+      * ``peer_latency_s`` / ``peer_bw`` — the tier-2 interconnect model
+        (same numbers :meth:`TierConfig.tier_duration` charges a fetch).
+      * ``mode`` — ``"fetch"``/``"ship"`` force their path; ``"auto"``
+        takes the cheaper one, preferring ship on exact ties (a ship
+        leaves tier 0 untouched, so the tie costs no cache churn).
+
+    ``fetch_s`` is constant in tokens and strictly increasing in
+    ``weight_bytes``; ``ship_s`` is strictly increasing in tokens — so
+    ``auto`` has a single breakeven token count per expert, below which
+    tokens travel and above which weights do. Property tests pin the
+    monotonicity and that ``choose`` never returns the strictly more
+    expensive path.
+    """
+    weight_bytes: int
+    act_bytes_per_token: int
+    ffn_s_per_token: float
+    ffn_s_base: float
+    peer_latency_s: float
+    peer_bw: float
+    mode: str = "auto"
+
+    def fetch_s(self) -> float:
+        """Modeled seconds to pull the expert's weights from the peer."""
+        return self.peer_latency_s + self.weight_bytes / self.peer_bw
+
+    def ship_s(self, tokens: int) -> float:
+        """Modeled seconds to ship ``tokens`` to the peer, compute the
+        expert FFN there, and return the outputs."""
+        return (self.peer_latency_s
+                + tokens * self.act_bytes_per_token / self.peer_bw
+                + self.ffn_s_base + tokens * self.ffn_s_per_token)
+
+    def ship_bytes(self, tokens: int) -> int:
+        """Wire bytes a ship of ``tokens`` puts on the interconnect."""
+        return tokens * self.act_bytes_per_token
+
+    def choose(self, tokens: int) -> str:
+        """``"fetch"`` or ``"ship"`` for a group of ``tokens`` tokens."""
+        if self.mode != "auto":
+            return self.mode
+        return "ship" if self.ship_s(tokens) <= self.fetch_s() else "fetch"
 
 
 def _hash64(*parts) -> int:
@@ -192,6 +270,11 @@ class StoreStats:
       * ``quantized_fetches`` — fetches served from int8 cold storage
         (dequantized on the way up).
       * ``spilled_experts`` — experts homed on disk at placement time.
+      * ``ships`` — compute-dispatch round trips: token groups sent to a
+        peer-resident expert instead of fetching its weights.
+      * ``ship_bytes`` — activation bytes those round trips put on the
+        interconnect (tokens out + outputs back; no weight bytes move).
+      * ``ship_tokens`` — tokens computed remotely across all ships.
     """
     fetches_by_tier: Dict[int, int] = field(default_factory=dict)
     bytes_by_tier: Dict[int, int] = field(default_factory=dict)
@@ -202,6 +285,9 @@ class StoreStats:
     cache_evictions_lru: int = 0
     quantized_fetches: int = 0
     spilled_experts: int = 0
+    ships: int = 0
+    ship_bytes: int = 0
+    ship_tokens: int = 0
 
     def count(self, tier: int, nbytes: int) -> None:
         self.fetches_by_tier[tier] = self.fetches_by_tier.get(tier, 0) + 1
@@ -226,6 +312,7 @@ class ResidencyLedger:
         self._home: Dict[Key, Tuple[int, int]] = {}   # key -> (shard, tier)
         self._cached: Dict[Key, Set[int]] = {}        # key -> cached tiers
         self._pins: Dict[Key, int] = {}
+        self._accesses: Dict[Key, int] = {}           # placement signal
 
     def place(self, key: Key, shard: int, tier: int) -> None:
         assert key not in self._home, f"{key!r} already has a home"
@@ -264,6 +351,18 @@ class ResidencyLedger:
     def tier_of(self, key: Key) -> int:
         """Fastest tier the key is findable in (home or cached copy)."""
         return min(self._cached.get(key, set()) | {self._home[key][1]})
+
+    # -- access accounting -------------------------------------------------
+    def note_access(self, key: Key) -> None:
+        """Record a use of ``key`` for placement/promotion decisions.
+        Shipped computations call this too: a remote compute IS demand for
+        the expert even though no bytes moved and no tier gained a copy —
+        future placement (rebalance, promotion heuristics) should see it."""
+        assert key in self._home, f"access of unplaced key {key!r}"
+        self._accesses[key] = self._accesses.get(key, 0) + 1
+
+    def accesses(self, key: Key) -> int:
+        return self._accesses.get(key, 0)
 
     # -- pinning -----------------------------------------------------------
     def pin(self, key: Key) -> None:
@@ -317,6 +416,8 @@ class TieredExpertStore:
         assert len(tc.horizons) == 4 and min(tc.horizons) >= 1
         assert tc.cold_dtype in (None, "int8"), \
             f"unsupported cold_dtype {tc.cold_dtype!r}"
+        assert tc.dispatch in ("fetch", "ship", "auto"), \
+            f"unsupported dispatch {tc.dispatch!r}"
         self.base = HostExpertStore(expert_params_per_layer)
         self.tc = tc
         # learned tier-1 replacement: when a ReuseDistanceScorer is wired
@@ -528,12 +629,39 @@ class TieredExpertStore:
                 self._promote(key, w)
                 self.stats.promotions += 1
         self._on_device[key] = w
+        self.ledger.note_access(key)
         self.stats.count(tier, nbytes)
         return w, FetchInfo(tier, nbytes, self.tc.tier_duration(tier, nbytes))
 
     def get(self, key: Key):
         """Weights only (HostExpertStore parity API)."""
         return self.fetch(key)[0]
+
+    def ship(self, key: Key, tokens: int, wire_bytes: int):
+        """Compute-dispatch access: the peer computes the expert FFN on a
+        shipped token group instead of the weights being fetched. Returns
+        the weights the peer would compute with — ``base`` bytes, or the
+        deterministic *dequantized cold copy* when ``cold_dtype`` is set,
+        i.e. exactly what a fetch would have delivered, so fetch/ship
+        streams match even on quantized tiers. Accounting only: counts
+        the ship, refreshes the recency of any existing tier-1 cached copy
+        and notes the access in the ledger — NO tier-0/tier-1 insert and
+        no weight bytes move (the anti-thrash half of the design: a
+        one-off cold expert serves its few tokens without evicting the
+        warm working set)."""
+        assert self.ledger.home(key)[1] == TIER_PEER, \
+            f"ship of non-peer-homed key {key!r}"
+        if self._is_cold(key, TIER_PEER):
+            w = self._dequantize(*self._cold_copy(key))
+        else:
+            w = self.base.get(key)
+        if key in self._cache:          # refresh, never insert
+            self._cache.move_to_end(key)
+        self.ledger.note_access(key)
+        self.stats.ships += 1
+        self.stats.ship_bytes += wire_bytes
+        self.stats.ship_tokens += tokens
+        return w
 
     def demote(self, key: Key) -> None:
         """Tier-0 eviction callback: keep the bytes one tier down instead

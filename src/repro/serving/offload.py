@@ -44,6 +44,14 @@ Key = Tuple[int, int]  # (moe_layer_index, expert_id)
 # hierarchy lives in serving/expertstore.py.
 TIER_DEVICE, TIER_HOST, TIER_PEER, TIER_DISK = 0, 1, 2, 3
 
+# Pseudo-tier for the OverlapTracker's *ship* channel: instead of fetching
+# a peer-resident expert's weights (tier 2), the engine may ship the token
+# activations to the peer, compute the expert FFN there, and pull the
+# outputs back (serving/expertstore.DispatchPlanner prices the two paths).
+# Ship traffic rides its own serial channel so stall/overlap attribution
+# separates "waiting on weights" from "waiting on remote compute".
+CHANNEL_SHIP = 4
+
 
 @dataclass
 class FetchInfo:
@@ -156,28 +164,34 @@ class OverlapTracker:
         return max(self._channel_free.values(), default=0.0)
 
     def submit(self, key: Key, nbytes: int, tier: int = TIER_HOST,
-               duration: Optional[float] = None) -> bool:
+               duration: Optional[float] = None,
+               coalesce: bool = True) -> bool:
         """Queue a transfer for ``key``; returns True when it coalesced
         onto an identical transfer already in flight (no new channel time
-        or bytes charged)."""
+        or bytes charged). ``coalesce=False`` (the ship channel) neither
+        rides nor leaves a wire record: shipped bytes are this step's
+        activations/outputs, never re-servable to a later requester the
+        way an in-flight weight transfer is."""
         dur = nbytes / self.host_bw if duration is None else duration
         if len(self._wire) > 4 * (len(self.pending) + 8):
             self._prune_wire()
-        wire = self._wire.get(key)
         fresh = max(self.clock, self._channel_free.get(tier, 0.0)) + dur
-        if wire is not None and self.clock < wire[0] <= fresh:
-            # same bytes already on the wire and landing no later than a
-            # fresh fetch would: ride them
-            self.pending[key] = wire[0]
-            self._dur[key] = wire[1]
-            self._tier[key] = wire[2]
-            self.fetches_deduped += 1
-            return True
+        if coalesce:
+            wire = self._wire.get(key)
+            if wire is not None and self.clock < wire[0] <= fresh:
+                # same bytes already on the wire and landing no later than
+                # a fresh fetch would: ride them
+                self.pending[key] = wire[0]
+                self._dur[key] = wire[1]
+                self._tier[key] = wire[2]
+                self.fetches_deduped += 1
+                return True
         self._channel_free[tier] = fresh
         self.pending[key] = fresh
         self._dur[key] = dur
         self._tier[key] = tier
-        self._wire[key] = (fresh, dur, tier)
+        if coalesce:
+            self._wire[key] = (fresh, dur, tier)
         return False
 
     def _prune_wire(self) -> None:
@@ -235,20 +249,33 @@ class SlotBuffer:
     transfer to the source tier's channel — and ``release`` (the tier-0
     eviction callback) *demotes* the expert into the store's host-side
     cache instead of dropping it, so a re-fetch is served from tier 1
-    rather than the slow tier it originally came from."""
+    rather than the slow tier it originally came from.
+
+    ``ship_slots`` appends that many *ephemeral* rows past the
+    cache-managed ``n_slots``: the compute-dispatch path (``dispatch=
+    "ship"``/``"auto"``) stages a peer-resident expert's weights there for
+    exactly one expert-FFN program — the rows model the peer's own copy,
+    are never registered in ``slot_of``/the ExpertCache, charge no fetch
+    bytes, and are overwritten freely by the next step's shipped group.
+    Running the shipped experts through the SAME jitted slot-gather
+    program as resident ones is what keeps fetch/ship streams bit
+    identical."""
 
     def __init__(self, store: HostExpertStore, n_slots: int,
                  host_bw: float = 100e9,
-                 tracker: Optional[OverlapTracker] = None):
+                 tracker: Optional[OverlapTracker] = None,
+                 ship_slots: int = 0):
         lp = store.layers[0]
         e, d, f = lp["w_gate"].shape
         self.store = store
         self.n_slots = n_slots
+        self.ship_slots = ship_slots
         self.host_bw = host_bw
         self.tracker = tracker
-        self.w_gate = jnp.zeros((n_slots, d, f), lp["w_gate"].dtype)
-        self.w_up = jnp.zeros((n_slots, d, f), lp["w_up"].dtype)
-        self.w_down = jnp.zeros((n_slots, f, d), lp["w_down"].dtype)
+        rows = n_slots + ship_slots
+        self.w_gate = jnp.zeros((rows, d, f), lp["w_gate"].dtype)
+        self.w_up = jnp.zeros((rows, d, f), lp["w_up"].dtype)
+        self.w_down = jnp.zeros((rows, f, d), lp["w_down"].dtype)
         self.slot_of: Dict[Key, int] = {}
         self._free = list(range(n_slots))
         self.fetch_bytes = 0
@@ -290,6 +317,21 @@ class SlotBuffer:
         # fetch stalls fully — keep it the upper bound
         self.sim_fetch_s += dur
 
+    def fill_ship(self, idx: int, weights) -> int:
+        """Stage shipped-expert weights in ephemeral row ``idx`` (0-based
+        within the ship region); returns the absolute slot id to feed the
+        expert program. No slot table entry, no fetch accounting — the
+        modeled cost of the round trip is the ship channel's business
+        (``OverlapTracker.submit`` at ``CHANNEL_SHIP``)."""
+        assert 0 <= idx < self.ship_slots, \
+            f"ship row {idx} out of range (ship_slots={self.ship_slots})"
+        slot = self.n_slots + idx
+        wg, wu, wd = weights
+        self.w_gate = self.w_gate.at[slot].set(jnp.asarray(wg))
+        self.w_up = self.w_up.at[slot].set(jnp.asarray(wu))
+        self.w_down = self.w_down.at[slot].set(jnp.asarray(wd))
+        return slot
+
     def gather(self, keys) -> tuple:
         """Return (k, ...) stacked expert weights for resident keys."""
         slots = jnp.asarray([self.slot_of[k] for k in keys], jnp.int32)
@@ -305,13 +347,15 @@ class SlotBuffer:
 def make_offload_cache(store: HostExpertStore, capacity: int,
                        eviction: str = "lru", host_bw: float = 100e9,
                        tracker: Optional[OverlapTracker] = None,
-                       scorer=None):
+                       scorer=None, ship_slots: int = 0):
     """(ExpertCache, SlotBuffer) wired together. ``scorer`` (a
     ``core.policies.ReuseDistanceScorer``) is required for
     ``eviction="learned"`` — the engine feeds it the multi-horizon
     prediction window so tier-0 eviction picks the key predicted furthest
-    from reuse."""
-    buf = SlotBuffer(store, capacity, host_bw, tracker)
+    from reuse. ``ship_slots`` sizes the buffer's ephemeral
+    compute-dispatch rows (see :class:`SlotBuffer`)."""
+    buf = SlotBuffer(store, capacity, host_bw, tracker,
+                     ship_slots=ship_slots)
     cache = ExpertCache(capacity, eviction, on_evict=buf.release,
                         on_insert=buf.fill, scorer=scorer)
     return cache, buf

@@ -153,6 +153,11 @@ class BatchedOffloadEngine:
     single-host expert store for the tiered device/host/peer/disk
     hierarchy with horizon-aware prefetch — streams stay token-identical,
     only the storage substrate and the modeled fetch timeline change.
+    ``TierConfig.dispatch`` additionally lets the engine *ship token
+    groups to peer-resident experts* instead of fetching their weights
+    (``"ship"``/``"auto"``; see ``dispatch_summary`` for the traffic
+    split) — still token-identical, the peer computes with the same
+    bytes a fetch would have delivered.
     """
 
     def __init__(self, model, params, policy: PolicySpec, capacity: int,
@@ -224,6 +229,25 @@ class BatchedOffloadEngine:
     @property
     def stats(self) -> EngineStats:
         return self.core.stats
+
+    def dispatch_summary(self) -> Dict[str, float]:
+        """Fetch-vs-ship traffic split of the run so far (the
+        compute-dispatch report ``engine_bench --tiers --dispatch``
+        tabulates): ships and fetches executed, wire bytes each path put
+        on the interconnect, and the un-overlapped stall attributed to the
+        peer fetch channel (tier 2) vs the ship channel (4). All zeros on
+        fetch-only/single-host engines."""
+        s = self.core.stats
+        from repro.serving.offload import CHANNEL_SHIP, TIER_PEER
+        return {
+            "ships": s.ships,
+            "ship_tokens": s.ship_tokens,
+            "fetches": sum(s.fetches_by_tier.values()),
+            "ship_wire_bytes": s.ship_bytes,
+            "fetch_wire_bytes": s.fetch_bytes_by_tier.get(TIER_PEER, 0),
+            "peer_stall_s": s.stall_by_tier.get(TIER_PEER, 0.0),
+            "ship_stall_s": s.stall_by_tier.get(CHANNEL_SHIP, 0.0),
+        }
 
     def ttft(self) -> Dict[int, float]:
         """Admission-to-first-token seconds per request retired by the

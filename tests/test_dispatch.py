@@ -1,0 +1,429 @@
+"""Expert-parallel compute dispatch: the fetch-vs-ship roofline cost
+model, ship accounting (access without insert) at the store/ledger level,
+token-identical streams across ``dispatch`` modes (including int8 cold
+tiers), stall reduction in the cold-expert regime, and the real
+``all_to_all`` mesh program (multi-device lane in CI)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.tracing import moe_layer_ids
+from repro.serving.expertstore import (DispatchPlanner, TierConfig,
+                                       TieredExpertStore)
+from repro.serving.offload import (CHANNEL_SHIP, TIER_DISK, TIER_HOST,
+                                   TIER_PEER, HostExpertStore,
+                                   OverlapTracker)
+
+from helpers import tiny_backbone
+from test_expertstore import make_store_layers
+
+PROMPTS = [[3, 17, 5], [99, 255, 7, 42], [13, 5], [21, 8, 9]]
+MAX_NEW = 6
+CACHE_LEN = 16
+
+
+def make_planner(mode="auto", weight_bytes=1_000_000, act=256,
+                 per_tok=1e-7, base=1e-6, lat=20e-6, bw=25e9):
+    return DispatchPlanner(weight_bytes=weight_bytes,
+                           act_bytes_per_token=act, ffn_s_per_token=per_tok,
+                           ffn_s_base=base, peer_latency_s=lat, peer_bw=bw,
+                           mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+
+def test_planner_breakeven_is_single_crossover():
+    """ship_s grows with tokens while fetch_s is flat, so auto has exactly
+    one breakeven: ship below it, fetch above it, never a flip back."""
+    p = make_planner()
+    assert p.choose(1) == "ship"          # few tokens: activations are tiny
+    assert p.choose(10**6) == "fetch"     # a flood of tokens: move weights
+    decisions = [p.choose(t) for t in range(1, 5000)]
+    flips = sum(1 for a, b in zip(decisions, decisions[1:]) if a != b)
+    assert flips == 1
+    assert decisions[0] == "ship" and decisions[-1] == "fetch"
+
+
+def test_planner_forced_modes_and_bytes():
+    assert make_planner(mode="fetch").choose(1) == "fetch"
+    assert make_planner(mode="ship").choose(10**6) == "ship"
+    p = make_planner()
+    assert p.ship_bytes(3) == 3 * p.act_bytes_per_token
+
+
+def _random_planner(rng):
+    return make_planner(
+        weight_bytes=int(rng.integers(1, 10**9)),
+        act=int(rng.integers(1, 10**5)),
+        per_tok=float(rng.uniform(0, 1e-3)),
+        base=float(rng.uniform(0, 1e-2)),
+        lat=float(rng.uniform(0, 1e-2)),
+        bw=float(rng.uniform(1e3, 1e12)))
+
+
+def test_planner_properties_seeded_sweep():
+    """The hypothesis properties below, as a deterministic seeded sweep so
+    the invariants run even where hypothesis isn't installed."""
+    rng = np.random.default_rng(0)
+    for _ in range(500):
+        p = _random_planner(rng)
+        t = int(rng.integers(1, 10**6))
+        dt = int(rng.integers(1, 10**4))
+        dw = int(rng.integers(1, 10**8))
+        assert p.ship_s(t + dt) >= p.ship_s(t)
+        heavier = make_planner(weight_bytes=p.weight_bytes + dw,
+                               act=p.act_bytes_per_token,
+                               per_tok=p.ffn_s_per_token, base=p.ffn_s_base,
+                               lat=p.peer_latency_s, bw=p.peer_bw)
+        assert heavier.fetch_s() > p.fetch_s()
+        cost = {"fetch": p.fetch_s(), "ship": p.ship_s(t)}
+        assert cost[p.choose(t)] == min(cost.values())
+
+
+def test_planner_properties():
+    """Monotonicity + auto-never-strictly-worse, over random rooflines."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    planners = st.builds(
+        make_planner,
+        weight_bytes=st.integers(min_value=1, max_value=10**9),
+        act=st.integers(min_value=1, max_value=10**5),
+        per_tok=st.floats(min_value=0, max_value=1e-3),
+        base=st.floats(min_value=0, max_value=1e-2),
+        lat=st.floats(min_value=0, max_value=1e-2),
+        bw=st.floats(min_value=1e3, max_value=1e12))
+
+    @settings(deadline=None, max_examples=200)
+    @given(p=planners, t=st.integers(min_value=1, max_value=10**6),
+           dt=st.integers(min_value=1, max_value=10**4),
+           dw=st.integers(min_value=1, max_value=10**8))
+    def run(p, t, dt, dw):
+        # ship cost is monotone in token count
+        assert p.ship_s(t + dt) >= p.ship_s(t)
+        # fetch cost is monotone in weight bytes
+        heavier = make_planner(weight_bytes=p.weight_bytes + dw,
+                               act=p.act_bytes_per_token,
+                               per_tok=p.ffn_s_per_token, base=p.ffn_s_base,
+                               lat=p.peer_latency_s, bw=p.peer_bw)
+        assert heavier.fetch_s() > p.fetch_s()
+        # auto never picks the strictly more expensive path
+        cost = {"fetch": p.fetch_s(), "ship": p.ship_s(t)}
+        assert cost[p.choose(t)] == min(cost.values())
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# store/ledger: a ship is an access, never an insert
+
+def _peer_keys(store):
+    return [k for k in sorted(store.home_shard)
+            if store.ledger.home(k)[1] == TIER_PEER]
+
+
+def test_ship_serves_fetch_identical_bytes_without_residency_change():
+    layers = make_store_layers()
+    ref = HostExpertStore(layers)
+    tc = TierConfig(num_shards=3, shard_dram_experts=2, cache_experts=2,
+                    dispatch="auto")
+    store = TieredExpertStore(layers, tc)
+    key = _peer_keys(store)[0]
+    before_cache = set(store._cache)
+    before_copies = store.ledger.cached_tiers(key)
+    w = store.ship(key, tokens=3, wire_bytes=96)
+    for a, b in zip(w, ref.get(key)):
+        np.testing.assert_array_equal(a, b)
+    # accounting happened ...
+    assert store.stats.ships == 1
+    assert store.stats.ship_bytes == 96
+    assert store.stats.ship_tokens == 3
+    assert store.ledger.accesses(key) == 1
+    # ... but residency did not move: no promotion, no tier-0/1 insert
+    assert store.tier_of(key) == TIER_PEER
+    assert set(store._cache) == before_cache
+    assert store.ledger.cached_tiers(key) == before_copies
+    assert store.stats.promotions == 0
+    store.ledger.check()
+    store.close()
+
+
+def test_ship_refreshes_existing_cached_copy_and_rejects_non_peer():
+    layers = make_store_layers()
+    tc = TierConfig(num_shards=3, shard_dram_experts=2, cache_experts=2,
+                    dispatch="ship")
+    store = TieredExpertStore(layers, tc)
+    k0, k1 = _peer_keys(store)[:2]
+    store.fetch(k0)                      # promotes a tier-1 copy of k0
+    store.fetch(k1)                      # then k1 — k0 is now LRU victim
+    store.ship(k0, tokens=1, wire_bytes=32)
+    assert next(iter(store._cache)) == k1   # ship refreshed k0's recency
+    local = next(k for k in sorted(store.home_shard)
+                 if store.ledger.home(k)[1] == TIER_HOST)
+    with pytest.raises(AssertionError):
+        store.ship(local, tokens=1, wire_bytes=32)
+    store.close()
+
+
+def test_ship_int8_serves_dequantized_cold_copy():
+    """With int8 cold tiers the ship computes against the peer's
+    dequantized copy — the exact bytes a fetch would deliver — pinning
+    the 'ship against the dequantized peer copy' choice."""
+    layers = make_store_layers()
+    tc = TierConfig(num_shards=3, shard_dram_experts=2, cache_experts=0,
+                    cold_dtype="int8", dispatch="auto")
+    store = TieredExpertStore(layers, tc)
+    fetch_store = TieredExpertStore(layers, tc)
+    key = _peer_keys(store)[0]
+    shipped = store.ship(key, tokens=2, wire_bytes=64)
+    fetched = fetch_store.fetch(key)[0]
+    for a, b in zip(shipped, fetched):
+        np.testing.assert_array_equal(a, b)
+    ref = HostExpertStore(layers)
+    assert any(not np.array_equal(a, b)      # really the quantized form
+               for a, b in zip(shipped, ref.get(key)))
+    store.close()
+    fetch_store.close()
+
+
+def test_tracker_ship_channel_serial_and_uncoalescable():
+    tr = OverlapTracker(host_bw=1e9)
+    # ship submits never ride each other (activations, not weights) ...
+    assert not tr.submit(("s", 1), 0, tier=CHANNEL_SHIP, duration=1.0,
+                         coalesce=False)
+    assert not tr.submit(("s", 1), 0, tier=CHANNEL_SHIP, duration=1.0,
+                         coalesce=False)
+    assert tr.fetches_deduped == 0
+    # ... and queue serially on their own channel, overlapping other tiers
+    tr.submit(("w", 1), 1e9, tier=TIER_PEER)
+    stall = tr.wait([("s", 1), ("w", 1)])
+    assert stall == pytest.approx(2.0)       # two serial 1 s ships
+    assert tr.stall_by_tier[CHANNEL_SHIP] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# engine: token-identical streams across dispatch modes
+
+@pytest.fixture(scope="module")
+def backbone():
+    return tiny_backbone()
+
+
+def _tier_cfg(dispatch, cold=None, **kw):
+    return TierConfig(num_shards=4, shard_dram_experts=2, cache_experts=4,
+                      dispatch=dispatch, cold_dtype=cold, **kw)
+
+
+def _gen_all(eng):
+    out = [eng.generate(p, MAX_NEW, CACHE_LEN) for p in PROMPTS]
+    eng.core.store.close()
+    return out
+
+
+def test_dispatch_modes_stream_parity(backbone):
+    cfg, model, params, _ = backbone
+    from repro.serving.engine import OffloadEngine
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    streams, ships = {}, {}
+    for mode in ("fetch", "ship", "auto"):
+        eng = OffloadEngine(model, params, None, n_total,
+                            tiers=_tier_cfg(mode))
+        streams[mode] = _gen_all(eng)
+        ships[mode] = eng.stats.ships
+    assert streams["fetch"] == streams["ship"] == streams["auto"]
+    assert ships["fetch"] == 0
+    # the tiny model's experts dwarf a one-token activation, so both ship
+    # and auto really exercise the remote-compute path
+    assert ships["ship"] > 0 and ships["auto"] > 0
+
+
+def test_dispatch_batched_parity_and_summary(backbone):
+    cfg, model, params, _ = backbone
+    from repro.serving.config import ServeConfig
+    from repro.serving.scheduler import BatchedOffloadEngine
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    outs, summaries = {}, {}
+    for mode in ("fetch", "auto"):
+        sc = ServeConfig(max_batch=4, tiers=_tier_cfg(mode))
+        eng = BatchedOffloadEngine(model, params, None, n_total, serve=sc)
+        outs[mode] = eng.generate(PROMPTS, max_new=MAX_NEW,
+                                  cache_len=CACHE_LEN)
+        summaries[mode] = eng.dispatch_summary()
+        eng.core.store.close()
+    assert outs["fetch"] == outs["auto"]
+    assert summaries["fetch"]["ships"] == 0
+    assert summaries["auto"]["ships"] > 0
+    assert summaries["auto"]["ship_wire_bytes"] > 0
+    # shipping replaces peer weight traffic, it doesn't add to it
+    assert (summaries["auto"]["fetch_wire_bytes"]
+            < summaries["fetch"]["fetch_wire_bytes"])
+    # every ship carries >=1 token; batched lanes and prefill chunks group
+    # several tokens per shipped expert, so tokens dominate ships
+    assert summaries["auto"]["ships"] <= summaries["auto"]["ship_tokens"]
+
+
+def test_dispatch_int8_parity_pinned(backbone):
+    """auto/ship must not change the int8 stream: the ship computes with
+    the dequantized peer copy, so whatever deviation int8 introduces is
+    IDENTICAL across dispatch modes."""
+    cfg, model, params, _ = backbone
+    from repro.serving.engine import OffloadEngine
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    streams = {}
+    for mode in ("fetch", "ship", "auto"):
+        eng = OffloadEngine(model, params, None, n_total,
+                            tiers=_tier_cfg(mode, cold="int8"))
+        streams[mode] = _gen_all(eng)
+    assert streams["fetch"] == streams["ship"] == streams["auto"]
+
+
+def test_auto_cuts_stall_in_cold_expert_regime(backbone):
+    """Many experts, few tokens each, no tier-1 promotion cache: fetch-only
+    drags every cold expert's weights through a slow interconnect; auto
+    ships the token instead. At equal tier-0 capacity the un-overlapped
+    stall must strictly drop while streams stay token-identical — and the
+    shipped accesses must not have churned tier 0 (no insert)."""
+    cfg, model, params, _ = backbone
+    from repro.serving.engine import OffloadEngine
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    results = {}
+    for mode in ("fetch", "auto"):
+        tc = TierConfig(num_shards=4, shard_dram_experts=None,
+                        cache_experts=0, dispatch=mode,
+                        peer_latency_s=1e-4, peer_bw=1e8)
+        eng = OffloadEngine(model, params, None, cfg.moe.top_k + 1,
+                            layer_compute_s=1e-3, tiers=tc)
+        results[mode] = {
+            "streams": _gen_all(eng),
+            "stall": eng.stats.sim_stall_s,
+            "ships": eng.stats.ships,
+            "fetch_bytes": eng.stats.fetch_bytes,
+        }
+    assert results["auto"]["streams"] == results["fetch"]["streams"]
+    assert results["fetch"]["stall"] > 0
+    assert results["auto"]["stall"] < results["fetch"]["stall"]
+    assert results["auto"]["ships"] > 0
+    assert results["auto"]["fetch_bytes"] < results["fetch"]["fetch_bytes"]
+
+
+def test_prefetch_skips_ship_priced_keys(backbone):
+    """With a policy driving prefetch, peer-resident keys the planner
+    prices cheaper to ship are not prefetched — they arrive as ships, not
+    as cache inserts — and streams still match fetch mode exactly."""
+    cfg, model, params, _ = backbone
+    from repro.core.policies import NextLayerAllPolicy
+    from repro.serving.engine import OffloadEngine
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    streams, stats = {}, {}
+    for mode in ("fetch", "ship"):
+        pol = NextLayerAllPolicy(cfg.moe.num_experts)
+        eng = OffloadEngine(model, params, pol, n_total,
+                            tiers=_tier_cfg(mode))
+        streams[mode] = _gen_all(eng)
+        stats[mode] = (eng.stats.ships, eng.stats.fetch_bytes)
+    assert streams["ship"] == streams["fetch"]
+    assert stats["ship"][0] > 0
+    assert stats["ship"][1] < stats["fetch"][1]   # peer weights not pulled
+
+
+def test_engine_ship_slots_and_planner_wiring(backbone):
+    cfg, model, params, _ = backbone
+    from repro.serving.engine import OffloadEngine
+    n_total = len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+    fetch_eng = OffloadEngine(model, params, None, n_total,
+                              tiers=_tier_cfg("fetch"))
+    assert fetch_eng.core.planner is None
+    assert fetch_eng.core.slots.ship_slots == 0
+    fetch_eng.core.store.close()
+    auto_eng = OffloadEngine(model, params, None, n_total,
+                             tiers=_tier_cfg("auto"))
+    assert auto_eng.core.planner is not None
+    assert auto_eng.core.planner.mode == "auto"
+    assert auto_eng.core.slots.ship_slots > 0
+    # ephemeral rows sit past the cache-managed region
+    assert auto_eng.core.slots.w_gate.shape[0] == \
+        n_total + auto_eng.core.slots.ship_slots
+    auto_eng.core.store.close()
+
+
+# ---------------------------------------------------------------------------
+# the real all_to_all mesh program (CI runs this file under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8; on a single-device
+# host the mesh tests skip)
+
+def _dispatch_case(n_shards, e=8, d=4, f=6, c=3, seed=0):
+    """Random send buffers routing every token to its expert's home."""
+    rng = np.random.default_rng(seed)
+    wg = rng.normal(size=(e, d, f)).astype(np.float32)
+    wu = rng.normal(size=(e, d, f)).astype(np.float32)
+    wd = rng.normal(size=(e, f, d)).astype(np.float32)
+    e_local = e // n_shards
+    x = rng.normal(size=(n_shards, n_shards, c, d)).astype(np.float32)
+    eid = np.full((n_shards, n_shards, c), -1, np.int32)
+    for s in range(n_shards):
+        for dest in range(n_shards):
+            n_live = int(rng.integers(0, c + 1))    # ragged + padding slots
+            eid[s, dest, :n_live] = rng.integers(
+                dest * e_local, (dest + 1) * e_local, n_live)
+    return wg, wu, wd, x, eid
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >=2 devices (CI forces host devices)")
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_mesh_dispatch_matches_local_expert_ffn(n_shards):
+    if jax.device_count() < n_shards:
+        pytest.skip(f"needs {n_shards} devices")
+    from repro.launch.mesh import make_expert_mesh
+    from repro.launch.sharding import expert_dispatch_ffn
+    from repro.models.moe import expert_group_ffn
+    wg, wu, wd, x, eid = _dispatch_case(n_shards)
+    mesh = make_expert_mesh(n_shards)
+    out = np.asarray(expert_dispatch_ffn(mesh, wg, wu, wd, x, eid))
+    assert out.shape == x.shape
+    for s in range(n_shards):
+        for dest in range(n_shards):
+            for c_i in range(eid.shape[2]):
+                e_id = int(eid[s, dest, c_i])
+                if e_id < 0:
+                    np.testing.assert_array_equal(out[s, dest, c_i], 0.0)
+                    continue
+                ref = np.asarray(expert_group_ffn(
+                    wg[e_id], wu[e_id], wd[e_id], x[s, dest, c_i][None]))[0]
+                np.testing.assert_allclose(out[s, dest, c_i], ref,
+                                           rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >=2 devices (CI forces host devices)")
+def test_expert_mesh_uses_device_slice():
+    from repro.launch.mesh import make_expert_mesh
+    mesh = make_expert_mesh(2)
+    assert mesh.axis_names == ("expert",)
+    assert mesh.devices.size == 2
+    with pytest.raises(AssertionError):
+        make_expert_mesh(jax.device_count() + 1)
+
+
+def test_expert_group_ffn_matches_reference_kernel():
+    """The factored single-expert FFN (the unit a peer computes) must
+    match the slot-gather reference math for a 1-expert group."""
+    from repro.kernels.ref import expert_ffn_ref
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    d, f, n = 4, 6, 5
+    wg = rng.normal(size=(d, f)).astype(np.float32)
+    wu = rng.normal(size=(d, f)).astype(np.float32)
+    wd = rng.normal(size=(f, d)).astype(np.float32)
+    xs = rng.normal(size=(n, d)).astype(np.float32)
+    from repro.models.moe import expert_group_ffn
+    ys = np.asarray(expert_group_ffn(jnp.asarray(wg), jnp.asarray(wu),
+                                     jnp.asarray(wd), jnp.asarray(xs)))
+    for i in range(n):
+        ref = np.asarray(expert_ffn_ref(
+            jnp.asarray(xs[i]), jnp.ones((1,), jnp.float32),
+            jnp.asarray(wg)[None], jnp.asarray(wu)[None],
+            jnp.asarray(wd)[None]))
+        np.testing.assert_allclose(ys[i], ref, rtol=1e-5, atol=1e-6)

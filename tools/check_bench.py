@@ -1,0 +1,149 @@
+"""Perf-regression smoke gate for the tiered engine bench (CI).
+
+Extracts a small set of stable metrics from the ``--tiers --dispatch all``
+artifact (``benchmarks/engine_bench.py``) and fails when any regresses
+more than ``--tol`` (default 25%) against the committed
+``BENCH_BASELINE.json``:
+
+  * modeled un-overlapped stall (ms) for the fetch-only and auto dispatch
+    modes, and the horizon-aware prefetch row — deterministic given the
+    seeds (the OverlapTracker clock is modeled, not wall time), so a move
+    means the cost model or the engine's overlap behaviour changed;
+  * the stall *reductions* (auto vs fetch-only, horizon-aware vs fixed) —
+    the headline wins the benches assert directionally, gated here on
+    magnitude;
+  * the tier-0+1 hit rate of the full-capacity 4-shard sweep row —
+    deterministic routing + placement;
+  * the auto/fetch tok/s ratio — wall-clock, but machine speed cancels in
+    the ratio, so 25% is a wide-enough band for CI hosts.
+
+Absolute tok/s and wall seconds are deliberately NOT gated: they measure
+the CI host, not the code.
+
+Usage (from the repo root):
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --tiers \
+      --dispatch all --out artifacts/engine_bench_tiers.json
+  python tools/check_bench.py --current artifacts/engine_bench_tiers.json
+
+``--update`` rewrites the baseline from the current artifact (run it when
+a perf change is intentional and commit the diff). Exit 0 = within
+tolerance; 1 = regression (each printed on its own line).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "BENCH_BASELINE.json")
+
+# metric name -> direction: "lower" = smaller is better, "higher" = bigger
+DIRECTIONS = {
+    "dispatch_fetch_stall_ms": "lower",
+    "dispatch_auto_stall_ms": "lower",
+    "dispatch_stall_reduction": "higher",
+    "dispatch_tok_s_auto_over_fetch": "higher",
+    "horizon_aware_stall_ms": "lower",
+    "horizon_stall_reduction": "higher",
+    "tier01_hit_rate_4shard_full": "higher",
+}
+
+# below this, a "lower" metric is noise-floor and compared by absolute
+# slack instead of ratio (0.25 of ABS_FLOOR), so a 0.001 -> 0.002 ms move
+# cannot fail the gate
+ABS_FLOOR = 0.05
+
+
+def extract(doc: dict) -> dict:
+    """The gated metrics from one engine_bench --tiers artifact."""
+    out = {}
+    disp = doc.get("dispatch_comparison")
+    if disp and "fetch" in disp and "auto" in disp:
+        out["dispatch_fetch_stall_ms"] = disp["fetch"]["sim_stall_ms"]
+        out["dispatch_auto_stall_ms"] = disp["auto"]["sim_stall_ms"]
+        out["dispatch_tok_s_auto_over_fetch"] = (
+            disp["auto"]["tok_s"] / max(disp["fetch"]["tok_s"], 1e-9))
+    if "dispatch_stall_reduction" in doc:
+        out["dispatch_stall_reduction"] = doc["dispatch_stall_reduction"]
+    if "horizon_aware" in doc:
+        out["horizon_aware_stall_ms"] = doc["horizon_aware"]["sim_stall_ms"]
+    if "horizon_stall_reduction" in doc:
+        out["horizon_stall_reduction"] = doc["horizon_stall_reduction"]
+    rows = [r for r in doc.get("sweep", [])
+            if r["num_shards"] == 4 and r["replacement"] == "lru"]
+    if rows:
+        full = max(rows, key=lambda r: r["tier0_capacity"])
+        out["tier01_hit_rate_4shard_full"] = full["tier01_hit_rate"]
+    return out
+
+
+def compare(baseline: dict, current: dict, tol: float) -> list:
+    errors = []
+    for name, base in baseline.items():
+        direction = DIRECTIONS.get(name)
+        if direction is None:
+            continue
+        if name not in current:
+            errors.append(f"{name}: missing from current artifact "
+                          f"(baseline {base:.4g})")
+            continue
+        cur = current[name]
+        if direction == "lower":
+            limit = max(base * (1 + tol), ABS_FLOOR * tol + base)
+            if cur > limit:
+                errors.append(
+                    f"{name}: {cur:.4g} worse than baseline {base:.4g} "
+                    f"by more than {tol:.0%} (limit {limit:.4g})")
+        else:
+            limit = base * (1 - tol)
+            if cur < limit:
+                errors.append(
+                    f"{name}: {cur:.4g} worse than baseline {base:.4g} "
+                    f"by more than {tol:.0%} (limit {limit:.4g})")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="engine_bench --tiers --dispatch all JSON artifact")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline (default BENCH_BASELINE.json)")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current artifact")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = extract(json.load(f))
+    if not current:
+        print("check_bench: current artifact has none of the gated "
+              "metrics (was the bench run with --dispatch all?)")
+        return 1
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check_bench: baseline updated -> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    errors = compare(baseline, current, args.tol)
+    for e in errors:
+        print(f"check_bench: {e}")
+    if errors:
+        print(f"check_bench: {len(errors)} regression(s) beyond "
+              f"{args.tol:.0%}")
+        return 1
+    print(f"check_bench: OK ({len(baseline)} metrics within "
+          f"{args.tol:.0%} of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

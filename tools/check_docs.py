@@ -33,6 +33,7 @@ DOCUMENTED_CLASSES = [
     ("repro.serving.kvpool", "PoolStats"),
     ("repro.serving.expertstore", "TierConfig"),
     ("repro.serving.expertstore", "StoreStats"),
+    ("repro.serving.expertstore", "DispatchPlanner"),
     ("repro.core.cache", "CacheStats"),
     ("repro.serving.workload", "SLO"),
     ("repro.serving.workload", "PriorityClass"),
