@@ -61,6 +61,57 @@ import time
 import numpy as np
 
 
+class _SanitizerSession:
+    """--sanitize support: one :class:`~repro.analysis.RetraceGuard` around
+    the whole run (per-program XLA compile counts in the artifact) plus a
+    :class:`~repro.analysis.LeakSanitizer` auto-installed on every batched
+    engine the run constructs, so the pool refcount ledger and the expert
+    store's residency ledger are re-proved at every request retire."""
+
+    def __init__(self):
+        from repro.analysis import RetraceGuard
+        self.guard = RetraceGuard()
+        self.sanitizers = []
+        self._orig_init = None
+
+    def __enter__(self):
+        from repro.analysis import sanitize_engine
+        from repro.serving.scheduler import BatchedOffloadEngine
+        self.guard.__enter__()
+        orig = BatchedOffloadEngine.__init__
+        sanitizers = self.sanitizers
+
+        def init_with_sanitizer(eng, *a, **kw):
+            orig(eng, *a, **kw)
+            san = sanitize_engine(eng)
+            if san is not None:
+                sanitizers.append(san)
+
+        self._orig_init = orig
+        BatchedOffloadEngine.__init__ = init_with_sanitizer
+        return self
+
+    def __exit__(self, *exc):
+        from repro.serving.scheduler import BatchedOffloadEngine
+        if self._orig_init is not None:
+            BatchedOffloadEngine.__init__ = self._orig_init
+            self._orig_init = None
+        for san in self.sanitizers:
+            san.uninstall()
+        self.guard.__exit__(*exc)
+
+    def report(self) -> dict:
+        """The ``"sanitizer"`` artifact section."""
+        counts = self.guard.counts()
+        return {
+            "compiles_by_program": counts,
+            "distinct_programs": len(counts),
+            "total_compiles": sum(counts.values()),
+            "engines_sanitized": len(self.sanitizers),
+            "leak_checks": sum(s.checks for s in self.sanitizers),
+        }
+
+
 def _throughput(model, params, cfg, prompts, max_new: int, cache_len: int,
                 batch: int, log=print):
     """tokens/s: one batched engine at ``batch`` vs the same requests run
@@ -931,7 +982,7 @@ def run(log=print):
 
 def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
              tiers=False, slo=False, replacement="both", cold_dtype="both",
-             dispatch="fetch", log=print):
+             dispatch="fetch", sanitize=False, log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
     ragged-length admission-latency / memory-high-water workload;
@@ -940,7 +991,9 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
     shared-system-prompt workload (prefix cache on vs off); ``tiers`` to
     the tiered expert-store sweep (untrained weights — stream parity and
     modeled stall); ``slo`` to the open-loop SLO load sweep (untrained
-    weights — preemptive vs FIFO scheduling under Poisson traffic)."""
+    weights — preemptive vs FIFO scheduling under Poisson traffic);
+    ``sanitize`` wraps any of the above in the retrace/leak sanitizer
+    layer and adds a ``"sanitizer"`` section to the artifact."""
     from repro.configs import get_reduced
     from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
     from repro.core.tracing import moe_layer_ids
@@ -948,6 +1001,26 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
     from repro.launch.train import train
     from repro.models import build_model
     from repro.serving.engine import OffloadEngine
+
+    if sanitize:
+        with _SanitizerSession() as ses:
+            results = run_tiny(out_path=None, mixed=mixed, longctx=longctx,
+                               prefix=prefix, tiers=tiers, slo=slo,
+                               replacement=replacement,
+                               cold_dtype=cold_dtype, dispatch=dispatch,
+                               sanitize=False, log=log)
+        # zero observed compile events would mean the hook is dead and the
+        # compile counts vacuous — fail the bench rather than report them
+        ses.guard.self_check()
+        results["sanitizer"] = ses.report()
+        log(f"  sanitizer: {json.dumps(results['sanitizer'], indent=2)}")
+        if out_path:
+            os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                        exist_ok=True)
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=2)
+            log(f"  wrote {out_path}")
+        return results
 
     t0 = time.time()
     arch = "deepseek-v2-lite"
@@ -1069,6 +1142,11 @@ def main():
                          "group to the expert's shard instead of pulling "
                          "its weights; auto = roofline-priced per "
                          "(expert, token-count))")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="tiny modes: wrap the run in the retrace/leak "
+                         "sanitizer layer — per-program XLA compile counts "
+                         "in the artifact plus a pool/residency ledger "
+                         "check at every request retire")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
     if args.longctx and not args.tiny:
@@ -1081,7 +1159,7 @@ def main():
         run_tiny(args.out, mixed=args.mixed, longctx=args.longctx,
                  prefix=args.prefix, tiers=args.tiers, slo=args.slo,
                  replacement=args.replacement, cold_dtype=args.cold_dtype,
-                 dispatch=args.dispatch)
+                 dispatch=args.dispatch, sanitize=args.sanitize)
     else:
         results = run()
         if args.out:

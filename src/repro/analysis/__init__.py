@@ -1,0 +1,46 @@
+"""Static analysis + runtime sanitizers for the serving stack's contracts.
+
+Two halves:
+
+  * **Static** (stdlib-only, importable without jax): an AST rule engine
+    (``linter.py``) with the repo-specific rules in ``rules.py`` —
+    refcount pairing, tracer purity, shape-bucket discipline, stats
+    registration, config/test parity. Driven by ``tools/check_lint.py``
+    in CI; suppressions are ``# lint: disable=<rule> -- <reason>`` with
+    the reason mandatory.
+  * **Runtime** (``retrace_guard.py``, ``sanitize.py``): a compile-event
+    counter that pins "a warmed engine compiles zero new programs
+    mid-run", and a leak sanitizer that re-checks the KV pool's refcount
+    ledger (and the expert store's residency ledger) at every retire.
+"""
+from repro.analysis.linter import (  # noqa: F401
+    Diagnostic,
+    LintReport,
+    Rule,
+    run_lint,
+)
+from repro.analysis.rules import default_rules  # noqa: F401
+
+__all__ = [
+    "Diagnostic",
+    "LintReport",
+    "Rule",
+    "run_lint",
+    "default_rules",
+    "RetraceGuard",
+    "RetraceError",
+    "LeakSanitizer",
+    "sanitize_engine",
+]
+
+
+def __getattr__(name):
+    # the runtime half imports jax; keep the static half importable without
+    # it (the CI lint job installs no third-party deps)
+    if name in ("RetraceGuard", "RetraceError"):
+        from repro.analysis import retrace_guard
+        return getattr(retrace_guard, name)
+    if name in ("LeakSanitizer", "sanitize_engine"):
+        from repro.analysis import sanitize
+        return getattr(sanitize, name)
+    raise AttributeError(name)

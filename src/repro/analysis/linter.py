@@ -1,0 +1,312 @@
+"""AST rule engine for the repo-contract linter (stdlib only).
+
+The serving stack's correctness rests on conventions the type system
+cannot see: refcount acquire/release pairing, trace-time purity of jitted
+code, pow-2 shape bucketing at jit call sites, and "every knob/stat is
+documented, serialized, and test-pinned". This module is the machinery;
+the repo-specific rules live in ``rules.py`` and plug in through
+:class:`Rule`.
+
+Diagnostics are ``file:line:rule-id message``. A finding is silenced only
+by an *audited suppression* on the offending line (or a standalone
+comment on the line above)::
+
+    # lint: disable=rule-id -- why this is safe
+
+The reason after ``--`` is mandatory: a suppression without one (or
+naming an unknown rule) is itself a finding (``bad-suppression``) that no
+comment can silence. ``tools/check_lint.py`` drives this over ``src/``,
+``benchmarks/`` and ``tools/`` in CI and emits the JSON artifact.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: rule id for malformed suppression comments; never suppressable.
+BAD_SUPPRESSION = "bad-suppression"
+
+#: rule id for files the engine cannot parse; never suppressable.
+PARSE_ERROR = "parse-error"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)"
+    r"(?:\s*--\s*(?P<reason>\S.*?))?\s*$")
+
+
+@dataclass
+class Diagnostic:
+    """One linter finding, renderable as ``file:line:rule-id message``.
+
+      * ``file`` — path relative to the lint root.
+      * ``line`` — 1-based line of the offending statement.
+      * ``rule`` — the rule id that fired.
+      * ``message`` — human-readable description of the violation.
+      * ``suppressed`` — True when an audited suppression covers it.
+      * ``reason`` — the suppression's mandatory justification (None for
+        active findings).
+    """
+    file: str
+    line: int
+    rule: str
+    message: str
+    suppressed: bool = False
+    reason: Optional[str] = None
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line}:{self.rule} {self.message}"
+
+    def as_dict(self) -> dict:
+        d = {"file": self.file, "line": self.line, "rule": self.rule,
+             "message": self.message}
+        if self.suppressed:
+            d["suppressed"] = True
+            d["reason"] = self.reason
+        return d
+
+
+@dataclass
+class Suppression:
+    """A parsed ``# lint: disable=...`` comment."""
+    line: int                  # line the comment sits on
+    target: int                # line whose diagnostics it covers
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+
+
+@dataclass
+class ModuleInfo:
+    """One parsed source file plus its suppression table."""
+    path: str                  # absolute path
+    rel: str                   # path relative to the lint root
+    source: str
+    tree: ast.Module
+    suppressions: List[Suppression] = field(default_factory=list)
+
+    @property
+    def lines(self) -> List[str]:
+        return self.source.splitlines()
+
+
+@dataclass
+class Project:
+    """Every linted module plus the repo root, for cross-file rules."""
+    root: str
+    modules: List[ModuleInfo]
+
+    def read_texts(self, reldir: str) -> Dict[str, str]:
+        """Sources of ``*.py`` directly under ``root/reldir`` ({} if the
+        directory does not exist) — e.g. the tests/ corpus parity-pin
+        greps even though tests are not themselves linted."""
+        out: Dict[str, str] = {}
+        d = os.path.join(self.root, reldir)
+        if not os.path.isdir(d):
+            return out
+        for name in sorted(os.listdir(d)):
+            if name.endswith(".py"):
+                try:
+                    with open(os.path.join(d, name), encoding="utf-8") as f:
+                        out[os.path.join(reldir, name)] = f.read()
+                except OSError:
+                    continue
+        return out
+
+
+class Rule:
+    """Base class for pluggable lint rules.
+
+    Subclasses set ``rule_id``/``description`` and override one (or both)
+    of ``check_module`` (called per file) and ``check_project`` (called
+    once with every file, for cross-file contracts)."""
+
+    rule_id: str = ""
+    description: str = ""
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Diagnostic]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+
+def parse_suppressions(source: str) -> List[Suppression]:
+    """Scan a file for suppression comments.
+
+    Real COMMENT tokens only (a disable-example inside a docstring is
+    text, not a suppression). A comment trailing code covers its own
+    line; a standalone comment line covers the next code line, so
+    multi-line statements can be suppressed by a comment above them —
+    diagnostics anchor to a statement's *first* line."""
+    import io
+    import tokenize
+    out: List[Suppression] = []
+    pending: List[Suppression] = []
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError):
+        return out
+    _skip = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+             tokenize.INDENT, tokenize.DEDENT, tokenize.ENDMARKER,
+             getattr(tokenize, "ENCODING", -1)}
+    code_lines = sorted({t.start[0] for t in tokens if t.type not in _skip})
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        line = tok.start[0]
+        rules = tuple(r.strip() for r in m.group(1).split(","))
+        sup = Suppression(line=line, target=line, rules=rules,
+                          reason=m.group("reason"))
+        if tok.line[: tok.start[1]].strip():
+            out.append(sup)               # trailing: covers its own line
+        else:
+            pending.append(sup)           # standalone: covers next code line
+    for sup in pending:
+        nxt = [ln for ln in code_lines if ln > sup.line]
+        if nxt:
+            sup.target = nxt[0]
+            out.append(sup)
+    return out
+
+
+@dataclass
+class LintReport:
+    """Outcome of one lint run: active findings + audited suppressions."""
+    root: str
+    files: List[str]
+    rule_ids: List[str]
+    findings: List[Diagnostic]
+    suppressed: List[Diagnostic]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def by_rule(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for d in self.findings:
+            counts[d.rule] = counts.get(d.rule, 0) + 1
+        return counts
+
+    def to_json(self) -> str:
+        doc = {
+            "version": 1,
+            "root": self.root,
+            "files_scanned": len(self.files),
+            "rules": self.rule_ids,
+            "findings": [d.as_dict() for d in self.findings],
+            "suppressed": [d.as_dict() for d in self.suppressed],
+            "summary": {
+                "findings": len(self.findings),
+                "suppressed": len(self.suppressed),
+                "by_rule": self.by_rule(),
+            },
+        }
+        return json.dumps(doc, indent=2, sort_keys=False) + "\n"
+
+
+def _collect_files(root: str, paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full) and full.endswith(".py"):
+            files.append(full)
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    files.append(os.path.join(dirpath, name))
+    return sorted(set(files))
+
+
+def load_module(root: str, path: str) -> Tuple[Optional[ModuleInfo],
+                                               Optional[Diagnostic]]:
+    rel = os.path.relpath(path, root)
+    try:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=rel)
+    except (OSError, SyntaxError, ValueError) as e:
+        line = getattr(e, "lineno", None) or 1
+        return None, Diagnostic(rel, line, PARSE_ERROR,
+                                f"cannot parse: {e}")
+    return ModuleInfo(path=path, rel=rel, source=source, tree=tree,
+                      suppressions=parse_suppressions(source)), None
+
+
+def _apply_suppressions(diags: List[Diagnostic],
+                        mods: Dict[str, ModuleInfo],
+                        known_rules: set) -> Tuple[List[Diagnostic],
+                                                   List[Diagnostic],
+                                                   List[Diagnostic]]:
+    """Split diagnostics into (active, suppressed) and emit
+    ``bad-suppression`` findings for malformed comments."""
+    bad: List[Diagnostic] = []
+    sup_index: Dict[Tuple[str, int, str], Suppression] = {}
+    for rel, mod in mods.items():
+        for sup in mod.suppressions:
+            unknown = [r for r in sup.rules if r not in known_rules]
+            if sup.reason is None:
+                bad.append(Diagnostic(
+                    rel, sup.line, BAD_SUPPRESSION,
+                    "suppression without a reason — write "
+                    "'# lint: disable=<rule> -- <why this is safe>'"))
+                continue
+            if unknown:
+                bad.append(Diagnostic(
+                    rel, sup.line, BAD_SUPPRESSION,
+                    f"suppression names unknown rule(s): "
+                    f"{', '.join(unknown)}"))
+                continue
+            for r in sup.rules:
+                sup_index[(rel, sup.target, r)] = sup
+    active: List[Diagnostic] = []
+    suppressed: List[Diagnostic] = []
+    for d in diags:
+        sup = sup_index.get((d.file, d.line, d.rule))
+        if sup is not None and d.rule not in (BAD_SUPPRESSION, PARSE_ERROR):
+            d.suppressed, d.reason = True, sup.reason
+            suppressed.append(d)
+        else:
+            active.append(d)
+    return active, suppressed, bad
+
+
+def run_lint(root: str, paths: Sequence[str],
+             rules: Sequence[Rule]) -> LintReport:
+    """Lint every ``*.py`` under ``paths`` (relative to ``root``) with
+    ``rules``; returns a :class:`LintReport` with suppressions applied."""
+    root = os.path.abspath(root)
+    files = _collect_files(root, paths)
+    mods: Dict[str, ModuleInfo] = {}
+    diags: List[Diagnostic] = []
+    for path in files:
+        mod, err = load_module(root, path)
+        if err is not None:
+            diags.append(err)
+            continue
+        mods[mod.rel] = mod
+    project = Project(root=root, modules=list(mods.values()))
+    for rule in rules:
+        for mod in project.modules:
+            diags.extend(rule.check_module(mod))
+        diags.extend(rule.check_project(project))
+    known = {r.rule_id for r in rules}
+    active, suppressed, bad = _apply_suppressions(diags, mods, known)
+    active.extend(bad)
+    key = (lambda d: (d.file, d.line, d.rule))
+    return LintReport(
+        root=root,
+        files=[os.path.relpath(p, root) for p in files],
+        rule_ids=sorted(known),
+        findings=sorted(active, key=key),
+        suppressed=sorted(suppressed, key=key),
+    )

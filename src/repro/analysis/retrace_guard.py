@@ -1,0 +1,169 @@
+"""Compile-event retrace guard: pin "a warmed engine compiles nothing".
+
+Every jitted program in the serving stack is shape-bucketed (decode
+lanes, prefill chunks, block tables all pad to pow-2 buckets) precisely
+so that a warmed engine never pays an XLA compile mid-run — PR 6's SLO
+numbers assume it. This module turns that convention into an assertable
+invariant: :class:`RetraceGuard` hooks the ``jax.log_compiles`` event
+stream (the WARNING records jax emits per actual XLA compilation, cache
+hits excluded) and counts compilations per jitted program, so a test or
+bench can warm an engine, take a snapshot, run traffic, and assert zero
+new programs compiled::
+
+    with RetraceGuard() as guard:
+        warm(engine)                     # compiles the bucket family
+        with guard.frozen("warmed engine"):
+            engine.run_workload(...)     # any compile -> RetraceError
+
+The hook is logging-based (``jax._src.interpreters.pxla`` "Compiling
+<name> ..." records, with the ``jax._src.dispatch`` "Finished XLA
+compilation" records as a fallback source), so it needs no private API
+beyond the documented ``jax_log_compiles`` flag. ``self_check`` guards
+the guard: if warmup observed zero compile events the hook is broken
+(jax renamed its loggers) and freezing would be vacuous — fail loudly
+instead.
+"""
+from __future__ import annotations
+
+import logging
+import re
+import threading
+from collections import Counter, defaultdict
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional
+
+_COMPILE_LOGGERS = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+#: one record per actual XLA compilation (primary source)
+_PXLA_RE = re.compile(r"^Compiling (\S+) with global shapes and types "
+                      r"(\[.*?\])")
+#: fallback source if the pxla logger ever goes quiet across jax versions
+_DISPATCH_RE = re.compile(r"^Finished XLA compilation of "
+                          r"(?:jit\()?([^\s()]+)\)? in")
+
+
+class RetraceError(AssertionError):
+    """A frozen (warmed) region compiled new XLA programs."""
+
+
+class _CompileLogHandler(logging.Handler):
+    def __init__(self, guard: "RetraceGuard"):
+        super().__init__(level=logging.DEBUG)
+        self._guard = guard
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            self._guard._observe(record.name, record.getMessage())
+        except Exception:       # a sanitizer must never break the run
+            pass
+
+
+class RetraceGuard:
+    """Counts XLA compilations per jitted program while active.
+
+    Use as a context manager: entering enables ``jax_log_compiles`` and
+    attaches a log handler; exiting restores the previous flag value.
+    ``counts()`` maps program name -> compilations (one per shape bucket),
+    ``frozen()`` wraps a region that must compile nothing new."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pxla: Counter = Counter()
+        self._dispatch: Counter = Counter()
+        self._signatures: Dict[str, List[str]] = defaultdict(list)
+        self._handler: Optional[_CompileLogHandler] = None
+        self._prev_flag: Optional[bool] = None
+        self._prev_levels: Dict[str, int] = {}
+
+    # -- event intake ------------------------------------------------------
+    def _observe(self, logger_name: str, message: str) -> None:
+        m = _PXLA_RE.match(message)
+        if m:
+            with self._lock:
+                self._pxla[m.group(1)] += 1
+                self._signatures[m.group(1)].append(m.group(2))
+            return
+        m = _DISPATCH_RE.match(message)
+        if m:
+            with self._lock:
+                self._dispatch[m.group(1)] += 1
+
+    # -- lifecycle ---------------------------------------------------------
+    def __enter__(self) -> "RetraceGuard":
+        import jax
+        self._prev_flag = bool(jax.config.jax_log_compiles)
+        jax.config.update("jax_log_compiles", True)
+        self._handler = _CompileLogHandler(self)
+        for name in _COMPILE_LOGGERS:
+            lg = logging.getLogger(name)
+            self._prev_levels[name] = lg.level
+            # log_compiles promotes compile records to WARNING; make sure
+            # the logger does not filter below that regardless of app config
+            if lg.level > logging.WARNING:
+                lg.setLevel(logging.WARNING)
+            lg.addHandler(self._handler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        import jax
+        for name in _COMPILE_LOGGERS:
+            lg = logging.getLogger(name)
+            if self._handler is not None:
+                lg.removeHandler(self._handler)
+            if name in self._prev_levels:
+                lg.setLevel(self._prev_levels[name])
+        self._handler = None
+        if self._prev_flag is not None:
+            jax.config.update("jax_log_compiles", self._prev_flag)
+        self._prev_flag = None
+
+    # -- queries -----------------------------------------------------------
+    def counts(self) -> Dict[str, int]:
+        """Program name -> compilations observed (pxla source preferred;
+        dispatch-completion records only if pxla saw nothing)."""
+        with self._lock:
+            src = self._pxla if self._pxla else self._dispatch
+            return dict(src)
+
+    def total(self) -> int:
+        return sum(self.counts().values())
+
+    def signatures(self, program: str) -> List[str]:
+        """Argument-shape signatures compiled for ``program`` — each entry
+        is one bucket; duplicates mean the engine recompiled a shape it
+        had already paid for."""
+        with self._lock:
+            return list(self._signatures.get(program, ()))
+
+    def snapshot(self) -> Dict[str, int]:
+        return self.counts()
+
+    def new_since(self, snapshot: Dict[str, int]) -> Dict[str, int]:
+        """Programs (with counts) compiled after ``snapshot`` was taken."""
+        now = self.counts()
+        return {name: n - snapshot.get(name, 0)
+                for name, n in now.items() if n > snapshot.get(name, 0)}
+
+    def self_check(self) -> None:
+        """Raise if the hook observed no compile events at all — a frozen
+        region would then pass vacuously (e.g. jax renamed its compile
+        loggers)."""
+        if self.total() == 0:
+            raise RetraceError(
+                "RetraceGuard observed zero compile events — the "
+                "jax.log_compiles hook is not wired (jax logger rename?); "
+                "a frozen-region assertion would be vacuous")
+
+    @contextmanager
+    def frozen(self, what: str = "frozen region") -> Iterator[None]:
+        """Assert that no new XLA program compiles inside the block."""
+        before = self.snapshot()
+        yield
+        new = self.new_since(before)
+        if new:
+            detail = ", ".join(f"{name} x{n}"
+                               for name, n in sorted(new.items()))
+            raise RetraceError(
+                f"{what} compiled {sum(new.values())} new XLA program(s) "
+                f"mid-run: {detail} — an unbucketed shape or a rebuilt "
+                "closure slipped into the hot path")

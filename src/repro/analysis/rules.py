@@ -1,0 +1,568 @@
+"""The repo-specific lint rules (see ``linter.py`` for the engine).
+
+Five contracts, each born from a bug class this stack can actually have:
+
+  * ``refcount-pairing`` — a module that acquires references
+    (``retain``/``pin``/``fill``/``try_reserve``) must contain the paired
+    drop verb somewhere; an acquire with no reachable release path is how
+    the PoolStats/ResidencyLedger arithmetic goes out of balance. Also
+    flags a ``try_reserve`` whose boolean result is discarded.
+  * ``tracer-purity`` — inside a jitted function: Python ``if``/``while``
+    on traced values, ``int()``/``float()``/``bool()``/``.item()`` on
+    tracers, and closures over mutable engine state (``self.*`` reads),
+    all of which either crash at trace time or silently bake state into
+    the compiled program.
+  * ``bucket-discipline`` — jit call sites passing raw Python ints for
+    parameters that are neither declared static nor routed through the
+    pow-2 bucket helpers; un-bucketed dynamic sizes are the classic
+    mid-run recompile (the retrace guard is the runtime twin of this).
+  * ``stats-registration`` — every field of the stats dataclasses must be
+    named in its class docstring *and* reach an artifact (a blanket
+    ``as_dict`` on the class, or by name in ``benchmarks/engine_bench.py``
+    / a ``dispatch_summary``), so counters cannot silently stop being
+    reported.
+  * ``parity-pin`` — every ``ServeConfig``/``TierConfig`` knob must be
+    referenced by at least one module under ``tests/``: an un-pinned knob
+    is a code path CI never exercises.
+
+All rules are pure-AST/stdlib: the lint CI job needs no jax install.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.linter import Diagnostic, ModuleInfo, Project, Rule
+
+# ---------------------------------------------------------------------------
+# shared: the per-module jit index
+# ---------------------------------------------------------------------------
+
+#: args in these positions of ``partial(jax.jit, f, ...)`` / decorators
+_JIT_NAMES = {"jit"}
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    """``jax.jit`` / ``jit`` (as imported name) reference."""
+    if isinstance(node, ast.Attribute):
+        return node.attr in _JIT_NAMES
+    if isinstance(node, ast.Name):
+        return node.id in _JIT_NAMES
+    return False
+
+
+def _const_strs(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return out
+    return []
+
+
+def _const_ints(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [elt.value for elt in node.elts
+                if isinstance(elt, ast.Constant)
+                and isinstance(elt.value, int)]
+    return []
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    names += [p.arg for p in a.kwonlyargs]
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _static_from_call(call: ast.Call, params: List[str]) -> Set[str]:
+    """static_argnames / static_argnums keywords of a jit/partial call."""
+    static: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            static.update(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            for i in _const_ints(kw.value):
+                if 0 <= i < len(params):
+                    static.add(params[i])
+    return static
+
+
+@dataclass
+class JitFunction:
+    """One function known (syntactically) to be wrapped by ``jax.jit``."""
+    node: ast.AST                       # FunctionDef or Lambda
+    name: str                           # def name / assigned name
+    params: List[str]
+    static: Set[str]
+
+
+@dataclass
+class JitIndex:
+    """Per-module table of jitted functions and their call aliases."""
+    functions: List[JitFunction] = field(default_factory=list)
+    #: callable-name -> JitFunction, covering the def name, plain-name
+    #: aliases (``f = jax.jit(g)``) and attribute aliases
+    #: (``self._attn = attn_batched`` -> key ``_attn``)
+    by_callee: Dict[str, JitFunction] = field(default_factory=dict)
+
+
+def build_jit_index(mod: ModuleInfo) -> JitIndex:
+    idx = JitIndex()
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+
+    def register(jf: JitFunction):
+        idx.functions.append(jf)
+        idx.by_callee[jf.name] = jf
+
+    # decorated defs: @jax.jit / @partial(jax.jit, static_argnames=...)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = _param_names(node)
+        for dec in node.decorator_list:
+            if _is_jit_ref(dec):
+                register(JitFunction(node, node.name, params, set()))
+                break
+            if isinstance(dec, ast.Call):
+                # @partial(jax.jit, ...) or @jax.jit(...)
+                wraps_jit = (_is_jit_ref(dec.func)
+                             or any(_is_jit_ref(a) for a in dec.args))
+                if wraps_jit:
+                    register(JitFunction(node, node.name, params,
+                                         _static_from_call(dec, params)))
+                    break
+
+    # assignments: name = jax.jit(fn_or_lambda, ...) and attr aliases
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        value = node.value
+        tname = None
+        if isinstance(target, ast.Name):
+            tname = target.id
+        elif isinstance(target, ast.Attribute):
+            tname = target.attr
+        if tname is None:
+            continue
+        if isinstance(value, ast.Call) and _is_jit_ref(value.func) \
+                and value.args:
+            fn = value.args[0]
+            if isinstance(fn, ast.Lambda):
+                params = _param_names(fn)
+                register(JitFunction(fn, tname, params,
+                                     _static_from_call(value, params)))
+            elif isinstance(fn, ast.Name) and fn.id in defs:
+                wrapped = defs[fn.id]
+                params = _param_names(wrapped)
+                register(JitFunction(wrapped, tname, params,
+                                     _static_from_call(value, params)))
+        elif isinstance(value, ast.Name) and value.id in idx.by_callee:
+            # self._attn = attn_batched — alias to an already-jitted def
+            jf = idx.by_callee[value.id]
+            idx.by_callee[tname] = jf
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# rule 1: refcount-pairing
+# ---------------------------------------------------------------------------
+
+class RefcountPairingRule(Rule):
+    rule_id = "refcount-pairing"
+    description = ("reference acquires (retain/pin/fill/try_reserve) need "
+                   "a reachable paired drop verb in the same module")
+
+    #: acquire method -> acceptable drop verbs
+    PAIRS: Dict[str, Tuple[str, ...]] = {
+        "retain": ("free", "release"),
+        "pin": ("unpin",),
+        "fill": ("release", "drop"),
+        "try_reserve": ("unreserve", "release", "return_reservation"),
+    }
+
+    @staticmethod
+    def _method_calls(node: ast.AST) -> List[ast.Call]:
+        return [n for n in ast.walk(node)
+                if isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)]
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Diagnostic]:
+        module_verbs = {c.func.attr for c in self._method_calls(mod.tree)}
+        # method *definitions* count as drop paths too: a class that
+        # defines release()/unpin() is the owner of the drop side even if
+        # nothing in this module calls it (callers live elsewhere)
+        module_verbs |= {n.name for n in ast.walk(mod.tree)
+                         if isinstance(n, ast.FunctionDef)}
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for call in self._method_calls(fn):
+                verb = call.func.attr
+                drops = self.PAIRS.get(verb)
+                if drops is None:
+                    continue
+                if not any(d in module_verbs for d in drops):
+                    yield Diagnostic(
+                        mod.rel, call.lineno, self.rule_id,
+                        f"'{verb}' acquired in {fn.name}() but no paired "
+                        f"{'/'.join(drops)} anywhere in this module — "
+                        "refcount ledger cannot balance")
+        # a discarded try_reserve is an admission-control leak: the
+        # reservation is taken whether or not the caller looked
+        for stmt in ast.walk(mod.tree):
+            if (isinstance(stmt, ast.Expr)
+                    and isinstance(stmt.value, ast.Call)
+                    and isinstance(stmt.value.func, ast.Attribute)
+                    and stmt.value.func.attr == "try_reserve"):
+                yield Diagnostic(
+                    mod.rel, stmt.lineno, self.rule_id,
+                    "try_reserve() result discarded — on success the "
+                    "reservation leaks with no holder to unreserve it")
+
+
+# ---------------------------------------------------------------------------
+# rule 2: tracer-purity
+# ---------------------------------------------------------------------------
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type"}
+
+
+class TracerPurityRule(Rule):
+    rule_id = "tracer-purity"
+    description = ("no Python control flow / int()/float()/.item() on "
+                   "traced values or self.* closures inside jitted code")
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Diagnostic]:
+        for jf in build_jit_index(mod).functions:
+            yield from self._check_fn(mod, jf)
+
+    # -- helpers ----------------------------------------------------------
+    def _traced_use(self, node: ast.AST, traced: Set[str]) -> Optional[str]:
+        """Name of a traced value used *as a value* in ``node`` (None if
+        every traced reference is static metadata like ``x.shape``)."""
+        if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+            return None                       # x.shape / x.dtype: static
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in ("len", "isinstance",
+                                                    "type"):
+                return None                   # len(x) is static under trace
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` tests pytree structure
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                    and all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators):
+                return None
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in traced:
+            return node.id
+        for child in ast.iter_child_nodes(node):
+            hit = self._traced_use(child, traced)
+            if hit:
+                return hit
+        return None
+
+    def _check_fn(self, mod: ModuleInfo,
+                  jf: JitFunction) -> Iterable[Diagnostic]:
+        traced = set(jf.params) - jf.static
+        check_self = "self" not in jf.params
+        body = jf.node.body if isinstance(jf.node.body, list) \
+            else [jf.node.body]
+        yield from self._walk(mod, jf, body, traced, check_self)
+
+    def _walk(self, mod, jf, stmts, traced: Set[str],
+              check_self: bool) -> Iterable[Diagnostic]:
+        for stmt in stmts:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.Lambda)):
+                    # nested fns (vmap rows, scan bodies) see traced args
+                    traced = traced | set(_param_names(node))
+                if isinstance(node, (ast.If, ast.While)):
+                    name = self._traced_use(node.test, traced)
+                    if name:
+                        kw = "while" if isinstance(node, ast.While) else "if"
+                        yield Diagnostic(
+                            mod.rel, node.lineno, self.rule_id,
+                            f"Python `{kw}` on traced value '{name}' "
+                            f"inside jitted {jf.name}() — trace-time "
+                            "branch; use lax.cond/where or declare it "
+                            "static")
+                elif isinstance(node, ast.Call):
+                    f = node.func
+                    if isinstance(f, ast.Name) \
+                            and f.id in ("int", "float", "bool"):
+                        for arg in node.args:
+                            name = self._traced_use(arg, traced)
+                            if name:
+                                yield Diagnostic(
+                                    mod.rel, node.lineno, self.rule_id,
+                                    f"{f.id}() forces traced value "
+                                    f"'{name}' to a Python scalar inside "
+                                    f"jitted {jf.name}()")
+                                break
+                    elif isinstance(f, ast.Attribute) and f.attr == "item":
+                        yield Diagnostic(
+                            mod.rel, node.lineno, self.rule_id,
+                            f".item() inside jitted {jf.name}() — host "
+                            "sync / trace-time concretization")
+                elif (check_self and isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                        and isinstance(node.ctx, ast.Load)):
+                    yield Diagnostic(
+                        mod.rel, node.lineno, self.rule_id,
+                        f"jitted {jf.name}() closes over engine state "
+                        f"'self.{node.attr}' — bind it to a local at "
+                        "build time so the compiled program cannot drift "
+                        "from the object")
+
+
+# ---------------------------------------------------------------------------
+# rule 3: bucket-discipline
+# ---------------------------------------------------------------------------
+
+_BUCKET_HELPERS = {"bucket_size", "blocks_for"}
+_ARRAY_WRAPPERS = {"asarray", "array", "full", "zeros", "ones", "arange"}
+
+
+class BucketDisciplineRule(Rule):
+    rule_id = "bucket-discipline"
+    description = ("jit call sites must not pass raw Python ints for "
+                   "non-static params unless routed through the pow-2 "
+                   "bucket helpers")
+
+    @staticmethod
+    def _contains_call_to(node: ast.AST, names: Set[str]) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                f = n.func
+                fname = f.id if isinstance(f, ast.Name) else (
+                    f.attr if isinstance(f, ast.Attribute) else None)
+                if fname in names:
+                    return True
+        return False
+
+    def _int_like_vars(self, fn: ast.AST) -> Set[str]:
+        """Names visibly bound to raw Python ints in ``fn``: int literals,
+        ``len(...)``, arithmetic over those, or params annotated ``int``.
+        A name whose binding routes through a bucket helper is *not*
+        int-like (it is already disciplined)."""
+        likely: Set[str] = set()
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for p in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+                ann = p.annotation
+                if isinstance(ann, ast.Name) and ann.id == "int":
+                    likely.add(p.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                if self._contains_call_to(node.value, _BUCKET_HELPERS):
+                    likely.discard(name)
+                elif self._raw_int_expr(node.value, likely):
+                    likely.add(name)
+        return likely
+
+    def _raw_int_expr(self, node: ast.AST, int_vars: Set[str]) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, int) \
+                and not isinstance(node.value, bool)
+        if isinstance(node, ast.Name):
+            return node.id in int_vars
+        if isinstance(node, ast.Call):
+            f = node.func
+            fname = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            if fname == "len":
+                return True
+            if fname in ("int", "min", "max"):
+                return any(self._raw_int_expr(a, int_vars)
+                           for a in node.args)
+            return False
+        if isinstance(node, ast.BinOp):
+            return self._raw_int_expr(node.left, int_vars) \
+                and self._raw_int_expr(node.right, int_vars)
+        if isinstance(node, ast.UnaryOp):
+            return self._raw_int_expr(node.operand, int_vars)
+        return False
+
+    def check_module(self, mod: ModuleInfo) -> Iterable[Diagnostic]:
+        idx = build_jit_index(mod)
+        if not idx.by_callee:
+            return
+        jitted_nodes = {id(jf.node) for jf in idx.functions}
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if id(fn) in jitted_nodes:
+                continue                  # call sites, not jitted bodies
+            int_vars = self._int_like_vars(fn)
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                f = call.func
+                cname = f.id if isinstance(f, ast.Name) else (
+                    f.attr if isinstance(f, ast.Attribute) else None)
+                jf = idx.by_callee.get(cname or "")
+                if jf is None:
+                    continue
+                yield from self._check_call(mod, fn, call, jf, int_vars)
+
+    def _check_call(self, mod, fn, call: ast.Call, jf: JitFunction,
+                    int_vars: Set[str]) -> Iterable[Diagnostic]:
+        bound: List[Tuple[str, ast.AST]] = []
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                break
+            if i < len(jf.params):
+                bound.append((jf.params[i], arg))
+        for kw in call.keywords:
+            if kw.arg is not None:
+                bound.append((kw.arg, kw.value))
+        for pname, expr in bound:
+            if pname in jf.static:
+                continue
+            if self._contains_call_to(expr, _BUCKET_HELPERS
+                                      | _ARRAY_WRAPPERS):
+                continue
+            if self._raw_int_expr(expr, int_vars):
+                yield Diagnostic(
+                    mod.rel, call.lineno, self.rule_id,
+                    f"call to jitted {jf.name}() passes raw Python int "
+                    f"for param '{pname}' (not static, not bucketed) — "
+                    "declare it static, pad through bucket_size()/"
+                    "blocks_for(), or wrap in jnp.asarray")
+
+
+# ---------------------------------------------------------------------------
+# rule 4: stats-registration
+# ---------------------------------------------------------------------------
+
+_STATS_CLASSES = ("EngineStats", "PoolStats", "StoreStats", "CacheStats",
+                  "LatencyStats")
+_SERIALIZER_FNS = ("dispatch_summary", "as_dict")
+_SERIALIZER_FILES = ("benchmarks/engine_bench.py",)
+
+
+class StatsRegistrationRule(Rule):
+    rule_id = "stats-registration"
+    description = ("stats dataclass fields must be docstring-named and "
+                   "serialized (blanket as_dict or by name in engine_bench"
+                   "/dispatch_summary)")
+
+    @staticmethod
+    def _class_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+        out = []
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name) \
+                    and not stmt.target.id.startswith("_"):
+                out.append((stmt.target.id, stmt.lineno))
+        return out
+
+    @staticmethod
+    def _has_blanket_as_dict(cls: ast.ClassDef) -> bool:
+        for stmt in cls.body:
+            if isinstance(stmt, ast.FunctionDef) and stmt.name == "as_dict":
+                for n in ast.walk(stmt):
+                    if isinstance(n, ast.Call):
+                        f = n.func
+                        fname = f.id if isinstance(f, ast.Name) else (
+                            f.attr if isinstance(f, ast.Attribute) else None)
+                        if fname == "asdict":
+                            return True
+        return False
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        corpus = []
+        by_rel = {m.rel.replace("\\", "/"): m for m in project.modules}
+        for rel in _SERIALIZER_FILES:
+            mod = by_rel.get(rel)
+            if mod is not None:
+                corpus.append(mod.source)
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.FunctionDef) \
+                        and node.name in _SERIALIZER_FNS:
+                    corpus.append(ast.get_source_segment(mod.source, node)
+                                  or "")
+        corpus_text = "\n".join(corpus)
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not (isinstance(node, ast.ClassDef)
+                        and node.name in _STATS_CLASSES):
+                    continue
+                doc = ast.get_docstring(node) or ""
+                blanket = self._has_blanket_as_dict(node)
+                for name, line in self._class_fields(node):
+                    if not re.search(rf"``{re.escape(name)}``", doc):
+                        yield Diagnostic(
+                            mod.rel, line, self.rule_id,
+                            f"{node.name}.{name} is not named in the "
+                            "class docstring")
+                    if not blanket and not re.search(
+                            rf"\b{re.escape(name)}\b", corpus_text):
+                        yield Diagnostic(
+                            mod.rel, line, self.rule_id,
+                            f"{node.name}.{name} is never serialized — "
+                            "add it to an as_dict/dispatch_summary or an "
+                            "engine_bench artifact")
+
+
+# ---------------------------------------------------------------------------
+# rule 5: parity-pin
+# ---------------------------------------------------------------------------
+
+_CONFIG_CLASSES = ("ServeConfig", "TierConfig")
+
+
+class ParityPinRule(Rule):
+    rule_id = "parity-pin"
+    description = ("every ServeConfig/TierConfig knob must be referenced "
+                   "by at least one module under tests/")
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        tests = project.read_texts("tests")
+        if not tests:
+            return
+        corpus = "\n".join(tests.values())
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not (isinstance(node, ast.ClassDef)
+                        and node.name in _CONFIG_CLASSES):
+                    continue
+                for name, line in \
+                        StatsRegistrationRule._class_fields(node):
+                    if not re.search(rf"\b{re.escape(name)}\b", corpus):
+                        yield Diagnostic(
+                            mod.rel, line, self.rule_id,
+                            f"{node.name}.{name} is referenced by no test "
+                            "module — an un-pinned knob is a code path CI "
+                            "never exercises")
+
+
+def default_rules() -> List[Rule]:
+    """The shipped rule set, in reporting order."""
+    return [
+        RefcountPairingRule(),
+        TracerPurityRule(),
+        BucketDisciplineRule(),
+        StatsRegistrationRule(),
+        ParityPinRule(),
+    ]

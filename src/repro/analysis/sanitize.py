@@ -1,0 +1,80 @@
+"""Leak-sanitizer mode: re-check the refcount ledgers at every retire.
+
+``KVBlockPool.check_leaks`` proves two exact invariants
+(``allocs - releases == blocks live`` and ``allocs + retains - ref_drops
+== sum(refcounts)``) and the scheduler already runs it once per
+``_run_paged`` drain. Under the sanitizer the check runs at **every
+request retire** instead — the moment a table release could first go
+asymmetric — plus a full residency-ledger sweep of the tiered expert
+store when one is attached. ``benchmarks/engine_bench.py --sanitize``
+installs this and reports the check count in its artifacts; a failure
+surfaces as the assertion at the exact retire that broke the ledger,
+not as an unaccounted block three PRs later.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class LeakSanitizer:
+    """Wraps a :class:`~repro.serving.scheduler.BatchedOffloadEngine` so
+    every ``_retire`` re-proves the pool + residency-ledger invariants.
+
+    Usage::
+
+        san = LeakSanitizer(engine).install()
+        engine.run_workload(...)
+        san.uninstall()
+        artifact["leak_checks"] = san.checks
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.checks = 0          # ledger sweeps that passed
+        self._orig_retire = None
+
+    def install(self) -> "LeakSanitizer":
+        if self._orig_retire is not None:
+            return self
+        orig = self.engine._retire
+
+        def checked_retire(lanes, req, results):
+            orig(lanes, req, results)
+            self.check_now()
+
+        self._orig_retire = orig
+        self.engine._retire = checked_retire
+        return self
+
+    def uninstall(self) -> None:
+        if self._orig_retire is not None:
+            self.engine._retire = self._orig_retire
+            self._orig_retire = None
+
+    def __enter__(self) -> "LeakSanitizer":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    # ------------------------------------------------------------------
+    def check_now(self) -> None:
+        """One sweep: pool refcount arithmetic (mid-run form, no expected
+        in-use pin) + the expert store's residency ledger if present."""
+        pool = getattr(self.engine, "pool", None)
+        if pool is not None:
+            pool.check_leaks()
+        store = getattr(getattr(self.engine, "core", None), "store", None)
+        ledger = getattr(store, "ledger", None)
+        if ledger is not None:
+            ledger.check()
+        self.checks += 1
+
+
+def sanitize_engine(engine) -> Optional[LeakSanitizer]:
+    """Install a :class:`LeakSanitizer` when the engine has a ``_retire``
+    hook (batched scheduler); None for engines without one (batch-1
+    ``OffloadEngine`` has no retire path to instrument)."""
+    if hasattr(engine, "_retire"):
+        return LeakSanitizer(engine).install()
+    return None

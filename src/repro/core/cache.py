@@ -60,6 +60,11 @@ class CacheStats:
     def hit_rate(self) -> float:
         return self.hits / max(self.accesses, 1)
 
+    def as_dict(self) -> dict:
+        """Every counter as a JSON-ready dict (stats-registration lint)."""
+        from dataclasses import asdict
+        return asdict(self)
+
 
 class ExpertCache:
     def __init__(self, capacity: int, policy: str = "lru", on_evict=None,

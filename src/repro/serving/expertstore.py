@@ -293,6 +293,11 @@ class StoreStats:
         self.fetches_by_tier[tier] = self.fetches_by_tier.get(tier, 0) + 1
         self.bytes_by_tier[tier] = self.bytes_by_tier.get(tier, 0) + nbytes
 
+    def as_dict(self) -> dict:
+        """Every counter as a JSON-ready dict (stats-registration lint)."""
+        from dataclasses import asdict
+        return asdict(self)
+
 
 class ResidencyLedger:
     """Where every expert lives: one authoritative home + cached copies.

@@ -82,6 +82,11 @@ class PoolStats:
         """Peak fraction of allocatable blocks ever in use."""
         return self.high_water / max(num_blocks, 1)
 
+    def as_dict(self) -> dict:
+        """Every counter as a JSON-ready dict (stats-registration lint)."""
+        from dataclasses import asdict
+        return asdict(self)
+
 
 class KVBlockPool:
     """Fixed-capacity pool of KV blocks with refcounts and reservations.

@@ -1,0 +1,443 @@
+"""Repo-contract linter + runtime sanitizers: each rule catches its
+known-violation fixture (and stays quiet on the clean twin), suppressions
+require an audited reason, the JSON artifact keeps its schema, the repo
+itself lints clean, and the retrace guard pins "a warmed engine compiles
+zero new XLA programs mid-run" on a real BatchedOffloadEngine.
+
+Also the parity pins for the serving knobs the linter flagged as
+untested: ``ServeConfig.default_priority`` / ``ServeConfig.default_slo``
+(defaults must flow into submitted requests) and
+``TierConfig.local_shard`` (which shard's home experts are tier-0 local).
+"""
+import json
+import os
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import default_rules, run_lint
+from repro.analysis.linter import BAD_SUPPRESSION
+from repro.core.tracing import moe_layer_ids
+from repro.serving.config import ServeConfig
+from repro.serving.expertstore import TierConfig, TieredExpertStore
+from repro.serving.offload import TIER_HOST, TIER_PEER
+from repro.serving.scheduler import BatchedOffloadEngine
+from repro.serving.workload import SLO, WorkloadRequest
+
+from helpers import tiny_backbone
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CACHE_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# static half: the rule fixtures
+
+def _lint(tmp_path, *sources, extra_files=None):
+    """Write each source as src/mod<i>.py under a tmp project and lint."""
+    src = tmp_path / "src"
+    src.mkdir(exist_ok=True)
+    for i, text in enumerate(sources):
+        (src / f"mod{i}.py").write_text(textwrap.dedent(text))
+    for rel, text in (extra_files or {}).items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return run_lint(str(tmp_path), ["src"], default_rules())
+
+
+def _rules_hit(report):
+    return {d.rule for d in report.findings}
+
+
+def test_refcount_pairing_catches_unpaired_retain(tmp_path):
+    report = _lint(tmp_path, """\
+        def adopt(table, pool, bids):
+            for bid in bids:
+                pool.retain(bid)
+                table.append(bid)
+        """)
+    assert _rules_hit(report) == {"refcount-pairing"}
+    (d,) = report.findings
+    assert "retain" in d.message and d.line == 3
+
+
+def test_refcount_pairing_clean_when_drop_verb_present(tmp_path):
+    report = _lint(tmp_path, """\
+        def adopt(table, pool, bids):
+            for bid in bids:
+                pool.retain(bid)
+                table.append(bid)
+
+        def drop(table, pool):
+            for bid in table:
+                pool.free(bid)
+        """)
+    assert report.ok
+
+
+def test_refcount_pairing_catches_discarded_try_reserve(tmp_path):
+    report = _lint(tmp_path, """\
+        def admit(pool, n):
+            pool.try_reserve(n)
+
+        def retire(pool, n):
+            pool.unreserve(n)
+        """)
+    assert _rules_hit(report) == {"refcount-pairing"}
+    assert any("discarded" in d.message for d in report.findings)
+
+
+def test_tracer_purity_catches_branch_on_traced(tmp_path):
+    report = _lint(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    assert _rules_hit(report) == {"tracer-purity"}
+    (d,) = report.findings
+    assert "`if`" in d.message and "'x'" in d.message
+
+
+def test_tracer_purity_catches_self_closure(tmp_path):
+    report = _lint(tmp_path, """\
+        import jax
+
+        class Engine:
+            def build(self):
+                self._fn = jax.jit(lambda x: x * self.scale)
+        """)
+    assert _rules_hit(report) == {"tracer-purity"}
+    assert "self.scale" in report.findings[0].message
+
+
+def test_tracer_purity_clean_on_where_and_shape_metadata(tmp_path):
+    report = _lint(tmp_path, """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            if x.ndim == 2:
+                x = x[None]
+            return jnp.where(x > 0, x, -x)
+
+        @jax.jit
+        def maybe(x, extra):
+            if extra is None:
+                return x
+            return x + extra
+        """)
+    assert report.ok
+
+
+def test_bucket_discipline_catches_raw_int_at_jit_call(tmp_path):
+    report = _lint(tmp_path, """\
+        import jax
+
+        def _step(x, n):
+            return x[:n]
+
+        step = jax.jit(_step)
+
+        def caller(x, tokens):
+            return step(x, len(tokens))
+        """)
+    assert _rules_hit(report) == {"bucket-discipline"}
+    assert "'n'" in report.findings[0].message
+
+
+def test_bucket_discipline_clean_when_static_or_bucketed(tmp_path):
+    report = _lint(tmp_path, """\
+        import jax
+
+        def bucket_size(n, cap):
+            return min(cap, 1 << (n - 1).bit_length())
+
+        def _step(x, n):
+            return x[:n]
+
+        step = jax.jit(_step, static_argnames=("n",))
+        dyn = jax.jit(_step)
+
+        def caller(x, tokens):
+            step(x, len(tokens))
+            n = bucket_size(len(tokens), 8)
+            return dyn(x, n)
+        """)
+    assert report.ok
+
+
+def test_stats_registration_catches_undocumented_unserialized(tmp_path):
+    report = _lint(tmp_path, """\
+        from dataclasses import dataclass
+
+        @dataclass
+        class CacheStats:
+            '''Counters.
+
+              * ``hits`` — resident at access time.
+            '''
+            hits: int = 0
+            misses: int = 0
+        """)
+    assert _rules_hit(report) == {"stats-registration"}
+    msgs = " | ".join(d.message for d in report.findings)
+    assert "misses is not named in the class docstring" in msgs
+    assert "never serialized" in msgs
+
+
+def test_stats_registration_clean_with_docstring_and_blanket_dict(tmp_path):
+    report = _lint(tmp_path, """\
+        from dataclasses import asdict, dataclass
+
+        @dataclass
+        class CacheStats:
+            '''Counters.
+
+              * ``hits`` — resident at access time.
+              * ``misses`` — not resident at access time.
+            '''
+            hits: int = 0
+            misses: int = 0
+
+            def as_dict(self):
+                return asdict(self)
+        """)
+    assert report.ok
+
+
+def test_parity_pin_catches_untested_knob(tmp_path):
+    report = _lint(tmp_path, """\
+        from dataclasses import dataclass
+
+        @dataclass
+        class ServeConfig:
+            max_batch: int = 8
+            exotic_knob: int = 3
+        """, extra_files={
+            "tests/test_x.py": """\
+            def test_one():
+                assert ServeConfig(max_batch=2).max_batch == 2
+            """})
+    assert _rules_hit(report) == {"parity-pin"}
+    (d,) = report.findings
+    assert "exotic_knob" in d.message
+
+
+def test_parity_pin_silent_without_tests_dir(tmp_path):
+    report = _lint(tmp_path, """\
+        from dataclasses import dataclass
+
+        @dataclass
+        class ServeConfig:
+            exotic_knob: int = 3
+        """)
+    assert report.ok
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+_VIOLATION = """\
+    def adopt(table, pool, bids):
+        for bid in bids:
+            pool.retain(bid){trailer}
+"""
+
+
+def test_suppression_with_reason_silences_and_records(tmp_path):
+    trailer = ("  # lint: disable=refcount-pairing -- "
+               "caller releases via table.release()")
+    report = _lint(tmp_path, _VIOLATION.format(trailer=trailer))
+    assert report.ok
+    (d,) = report.suppressed
+    assert d.rule == "refcount-pairing" and d.suppressed
+    assert d.reason == "caller releases via table.release()"
+
+
+def test_standalone_suppression_covers_next_line(tmp_path):
+    report = _lint(tmp_path, """\
+        def adopt(table, pool, bids):
+            for bid in bids:
+                # lint: disable=refcount-pairing -- released by the caller
+                pool.retain(bid)
+        """)
+    assert report.ok and len(report.suppressed) == 1
+
+
+def test_suppression_without_reason_is_its_own_finding(tmp_path):
+    trailer = "  # lint: disable=refcount-pairing"
+    report = _lint(tmp_path, _VIOLATION.format(trailer=trailer))
+    assert _rules_hit(report) == {"refcount-pairing", BAD_SUPPRESSION}
+    assert not report.suppressed          # reason-less comment covers nothing
+
+
+def test_suppression_of_unknown_rule_is_a_finding(tmp_path):
+    report = _lint(tmp_path, """\
+        # lint: disable=no-such-rule -- because
+        x = 1
+        """)
+    assert _rules_hit(report) == {BAD_SUPPRESSION}
+    assert "unknown rule" in report.findings[0].message
+
+
+def test_docstring_disable_example_is_not_a_suppression(tmp_path):
+    report = _lint(tmp_path, '''\
+        """Docs showing the syntax::
+
+            # lint: disable=refcount-pairing -- example only
+        """
+        x = 1
+        ''')
+    assert report.ok and not report.suppressed
+
+
+# ---------------------------------------------------------------------------
+# artifact schema + the repo's own lint gate
+
+def test_json_report_schema(tmp_path):
+    trailer = "  # lint: disable=refcount-pairing -- audited"
+    report = _lint(tmp_path, _VIOLATION.format(trailer=trailer))
+    doc = json.loads(report.to_json())
+    assert doc["version"] == 1
+    assert set(doc) == {"version", "root", "files_scanned", "rules",
+                        "findings", "suppressed", "summary"}
+    assert doc["files_scanned"] == 1
+    assert set(doc["summary"]) == {"findings", "suppressed", "by_rule"}
+    assert doc["summary"]["suppressed"] == 1
+    (s,) = doc["suppressed"]
+    assert set(s) == {"file", "line", "rule", "message", "suppressed",
+                      "reason"}
+
+
+def test_repo_lints_clean():
+    """The acceptance pin: zero unsuppressed findings over the shipped
+    tree, and every suppression carries its audited reason."""
+    report = run_lint(REPO, ["src", "benchmarks", "tools"], default_rules())
+    assert report.ok, "\n".join(d.format() for d in report.findings)
+    assert all(d.reason for d in report.suppressed)
+
+
+# ---------------------------------------------------------------------------
+# runtime half: retrace guard + leak sanitizer on a real engine
+
+@pytest.fixture(scope="module")
+def backbone():
+    return tiny_backbone()
+
+
+def _n_total(cfg):
+    return len(moe_layer_ids(cfg)) * cfg.moe.num_experts
+
+
+def _engine(backbone, **serve_kw):
+    cfg, model, params, _ = backbone
+    return BatchedOffloadEngine(model, params, None, _n_total(cfg),
+                                serve=ServeConfig(**serve_kw))
+
+
+def _warm(eng):
+    """Compile every bucket the workload below can hit (prefill chunk
+    widths 1/2/4/8, 1..max_batch decode lanes)."""
+    probe = [[3, 1], [6, 2, 4], [8, 3, 6, 5, 2],
+             [9, 4, 1, 7, 2, 8, 3, 6, 5]]
+    eng.generate(probe[: eng.max_batch], max_new=2, cache_len=CACHE_LEN)
+    for p in probe[eng.max_batch:]:
+        eng.generate([p], max_new=2, cache_len=CACHE_LEN)
+
+
+def test_retrace_guard_counts_and_flags_restore():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import RetraceError, RetraceGuard
+
+    prev = bool(jax.config.jax_log_compiles)
+    f = jax.jit(lambda x: x * 2 + 1)
+    with RetraceGuard() as guard:
+        f(jnp.ones((3,)))
+        guard.self_check()                      # hook saw the compile
+        with guard.frozen("cached shape"):
+            f(jnp.ones((3,)))                   # cache hit: no event
+        with pytest.raises(RetraceError, match="new XLA program"):
+            with guard.frozen("fresh shape"):
+                f(jnp.ones((5,)))               # new bucket mid-freeze
+    assert bool(jax.config.jax_log_compiles) == prev
+
+
+def test_warmed_engine_compiles_zero_new_programs(backbone):
+    """The sanitizer invariant CI pins: after warmup covers the bucket
+    family, a whole open-loop workload compiles nothing."""
+    from repro.analysis import RetraceGuard
+
+    eng = _engine(backbone, max_batch=2, block_size=8)
+    with RetraceGuard() as guard:
+        _warm(eng)
+        guard.self_check()
+        wl = [WorkloadRequest(0.0, [5, 9, 2], 4),
+              WorkloadRequest(0.0, [7, 3], 4)]
+        with guard.frozen("warmed BatchedOffloadEngine.run_workload"):
+            res = eng.run_workload(wl, CACHE_LEN)
+    assert len(res) == 2
+    assert guard.total() > 0                    # warmup really compiled
+
+
+def test_leak_sanitizer_checks_every_retire(backbone):
+    from repro.analysis import sanitize_engine
+
+    eng = _engine(backbone, max_batch=2, block_size=8)
+    orig_retire = eng._retire
+    san = sanitize_engine(eng)
+    assert san is not None and eng._retire is not orig_retire
+    wl = [WorkloadRequest(0.0, [5, 9, 2], 3),
+          WorkloadRequest(0.0, [7, 3], 3),
+          WorkloadRequest(0.0, [8, 2, 4, 1], 3)]
+    res = eng.run_workload(wl, CACHE_LEN)
+    assert len(res) == 3
+    assert san.checks >= 3                      # one sweep per retire
+    san.uninstall()
+    assert eng._retire == orig_retire
+
+
+# ---------------------------------------------------------------------------
+# parity pins: the knobs the linter flagged as untested
+
+def test_serve_defaults_flow_into_requests(backbone):
+    eng = _engine(backbone, max_batch=2,
+                  default_priority=7, default_slo=SLO(ttft_s=0.5))
+    eng.submit([3, 1], 2)                       # takes both defaults
+    eng.submit([6, 2], 2, priority=1, slo=SLO(ttft_s=9.0))
+    by_rid = {req.rid: req for _, _, req in eng._queue}
+    defaulted, explicit = (by_rid[r] for r in sorted(by_rid))
+    assert defaulted.priority == 7
+    assert defaulted.slo is not None and defaulted.slo.ttft_s == 0.5
+    assert explicit.priority == 1 and explicit.slo.ttft_s == 9.0
+    res = eng.run(CACHE_LEN)                    # defaults survive a drain
+    assert len(res) == 2
+
+
+def test_local_shard_selects_the_tier0_home():
+    rng = np.random.default_rng(0)
+    e, d, f = 8, 4, 6
+    layers = [
+        {"w_gate": rng.normal(size=(e, d, f)).astype(np.float32),
+         "w_up": rng.normal(size=(e, d, f)).astype(np.float32),
+         "w_down": rng.normal(size=(e, f, d)).astype(np.float32)}
+        for _ in range(2)
+    ]
+    tc1 = TierConfig(num_shards=2, local_shard=1, cache_experts=0)
+    store1 = TieredExpertStore(layers, tc1)
+    key = next(k for k in sorted(store1.home_shard)
+               if store1.home_shard[k] == 1)
+    _, info = store1.fetch(key)
+    assert info.tier == TIER_HOST               # home shard is local
+    store0 = TieredExpertStore(
+        layers, TierConfig(num_shards=2, local_shard=0, cache_experts=0))
+    assert store0.home_shard[key] == 1          # placement ignores locality
+    _, info0 = store0.fetch(key)
+    assert info0.tier == TIER_PEER              # same key, now remote

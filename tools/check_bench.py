@@ -56,27 +56,64 @@ DIRECTIONS = {
 ABS_FLOOR = 0.05
 
 
-def extract(doc: dict) -> dict:
-    """The gated metrics from one engine_bench --tiers artifact."""
-    out = {}
-    disp = doc.get("dispatch_comparison")
-    if disp and "fetch" in disp and "auto" in disp:
-        out["dispatch_fetch_stall_ms"] = disp["fetch"]["sim_stall_ms"]
-        out["dispatch_auto_stall_ms"] = disp["auto"]["sim_stall_ms"]
-        out["dispatch_tok_s_auto_over_fetch"] = (
-            disp["auto"]["tok_s"] / max(disp["fetch"]["tok_s"], 1e-9))
+def extract(doc: dict) -> tuple[dict, list]:
+    """(gated metrics, missing dotted key paths) from one engine_bench
+    --tiers artifact. A renamed/removed key never raises: it lands in the
+    missing list so the gate can print a readable schema diff instead of
+    a KeyError traceback."""
+    out: dict = {}
+    missing: list = []
+
+    def dig(path: str):
+        cur = doc
+        parts = path.split(".")
+        for i, part in enumerate(parts):
+            if not isinstance(cur, dict) or part not in cur:
+                missing.append(".".join(parts[: i + 1]))
+                return None
+            cur = cur[part]
+        return cur
+
+    if "dispatch_comparison" in doc:
+        fetch_stall = dig("dispatch_comparison.fetch.sim_stall_ms")
+        auto_stall = dig("dispatch_comparison.auto.sim_stall_ms")
+        fetch_tok = dig("dispatch_comparison.fetch.tok_s")
+        auto_tok = dig("dispatch_comparison.auto.tok_s")
+        if fetch_stall is not None:
+            out["dispatch_fetch_stall_ms"] = fetch_stall
+        if auto_stall is not None:
+            out["dispatch_auto_stall_ms"] = auto_stall
+        if fetch_tok is not None and auto_tok is not None:
+            out["dispatch_tok_s_auto_over_fetch"] = (
+                auto_tok / max(fetch_tok, 1e-9))
     if "dispatch_stall_reduction" in doc:
         out["dispatch_stall_reduction"] = doc["dispatch_stall_reduction"]
     if "horizon_aware" in doc:
-        out["horizon_aware_stall_ms"] = doc["horizon_aware"]["sim_stall_ms"]
+        v = dig("horizon_aware.sim_stall_ms")
+        if v is not None:
+            out["horizon_aware_stall_ms"] = v
     if "horizon_stall_reduction" in doc:
         out["horizon_stall_reduction"] = doc["horizon_stall_reduction"]
-    rows = [r for r in doc.get("sweep", [])
-            if r["num_shards"] == 4 and r["replacement"] == "lru"]
+    rows = []
+    for i, r in enumerate(doc.get("sweep", [])):
+        if "num_shards" not in r or "replacement" not in r:
+            missing.append(f"sweep[{i}].num_shards|replacement")
+            continue
+        if r["num_shards"] == 4 and r["replacement"] == "lru":
+            rows.append((i, r))
     if rows:
-        full = max(rows, key=lambda r: r["tier0_capacity"])
-        out["tier01_hit_rate_4shard_full"] = full["tier01_hit_rate"]
-    return out
+        i, full = max(rows, key=lambda ir: ir[1].get("tier0_capacity", -1))
+        if "tier01_hit_rate" in full:
+            out["tier01_hit_rate_4shard_full"] = full["tier01_hit_rate"]
+        else:
+            missing.append(f"sweep[{i}].tier01_hit_rate")
+    return out, missing
+
+
+def key_diff(baseline: dict, current: dict) -> tuple[list, list]:
+    """Metric names (missing from current, extra in current) vs baseline."""
+    return (sorted(set(baseline) - set(current)),
+            sorted(set(current) - set(baseline)))
 
 
 def compare(baseline: dict, current: dict, tol: float) -> list:
@@ -118,13 +155,20 @@ def main() -> int:
     args = ap.parse_args()
 
     with open(args.current) as f:
-        current = extract(json.load(f))
+        current, missing_keys = extract(json.load(f))
+    if missing_keys:
+        print("check_bench: current artifact schema drift — missing "
+              "key(s): " + ", ".join(sorted(set(missing_keys))))
     if not current:
         print("check_bench: current artifact has none of the gated "
               "metrics (was the bench run with --dispatch all?)")
         return 1
 
     if args.update:
+        if missing_keys:
+            print("check_bench: refusing --update from a drifted artifact "
+                  "(the baseline would silently lose metrics)")
+            return 1
         with open(args.baseline, "w") as f:
             json.dump(current, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -133,7 +177,14 @@ def main() -> int:
 
     with open(args.baseline) as f:
         baseline = json.load(f)
+    miss_names, extra_names = key_diff(baseline, current)
+    if miss_names or extra_names:
+        print("check_bench: metric diff vs baseline — missing from "
+              f"current: {', '.join(miss_names) or 'none'}; extra in "
+              f"current: {', '.join(extra_names) or 'none'}")
     errors = compare(baseline, current, args.tol)
+    if missing_keys:
+        errors.append("artifact schema drifted (see missing keys above)")
     for e in errors:
         print(f"check_bench: {e}")
     if errors:

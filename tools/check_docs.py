@@ -40,6 +40,7 @@ DOCUMENTED_CLASSES = [
     ("repro.serving.workload", "WorkloadRequest"),
     ("repro.core.metrics", "RequestLatency"),
     ("repro.core.metrics", "LatencyStats"),
+    ("repro.analysis.linter", "Diagnostic"),
 ]
 
 MARKDOWN = ["README.md"] + sorted(

@@ -1,0 +1,78 @@
+"""Repo-contract linter runner (CI gate, stdlib only — no jax needed).
+
+Runs the AST rule engine (``src/repro/analysis/``) over ``src/``,
+``benchmarks/`` and ``tools/`` and fails on any unsuppressed finding.
+The five shipped rules guard the serving stack's conventions: refcount
+acquire/release pairing, tracer purity inside jitted code, pow-2 shape
+bucketing at jit call sites, stats-field docstring+serialization
+registration, and config-knob test parity (see
+``docs/ARCHITECTURE.md`` "Static analysis & sanitizers").
+
+Findings print as ``file:line:rule-id message``. Silencing one takes an
+*audited suppression* on the offending line (or standalone above it)::
+
+    # lint: disable=<rule-id> -- <why this is safe>
+
+The reason is mandatory; a reason-less suppression is itself a finding.
+
+Usage (from the repo root):
+  python tools/check_lint.py [--json artifacts/lint.json] [paths...]
+
+Exit 0 = clean; 1 = findings (each printed on its own line).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.linter import run_lint            # noqa: E402
+from repro.analysis.rules import default_rules        # noqa: E402
+
+DEFAULT_PATHS = ["src", "benchmarks", "tools"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the machine-readable report here")
+    args = ap.parse_args()
+
+    paths = args.paths or DEFAULT_PATHS
+    report = run_lint(REPO, paths, default_rules())
+
+    if args.json_out:
+        out_dir = os.path.dirname(args.json_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            f.write(report.to_json())
+
+    for d in report.findings:
+        print(f"check_lint: {d.format()}")
+    if report.findings:
+        counts = ", ".join(f"{r}={n}" for r, n in
+                           sorted(report.by_rule().items()))
+        print(f"check_lint: {len(report.findings)} finding(s) [{counts}] "
+              f"across {len(report.files)} files")
+        return 1
+    print(f"check_lint: OK ({len(report.files)} files, "
+          f"{len(report.rule_ids)} rules, "
+          f"{len(report.suppressed)} audited suppression(s))")
+    if report.suppressed:
+        doc = json.loads(report.to_json())
+        for s in doc["suppressed"]:
+            print(f"check_lint:   suppressed {s['file']}:{s['line']}:"
+                  f"{s['rule']} -- {s['reason']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
