@@ -50,6 +50,15 @@ baseline on p99 TTFT AND goodput at >=1 overload point with every stream
 token-identical to an uncontended reference run:
   PYTHONPATH=src python -m benchmarks.engine_bench --tiny --slo \
       --out artifacts/engine_bench_slo.json
+
+Telemetry-trace mode (--trace): the tiered paged engine with the runtime
+telemetry layer (serving/telemetry.py) on — per-request span timelines,
+copy-channel transfer tracks, and the predictor-quality scoreboard —
+pinned token-identical and deterministic-stats-identical against a
+telemetry-off twin, written as Chrome trace_event JSON that opens in
+ui.perfetto.dev (tools/check_trace.py validates it in CI):
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --trace \
+      --out artifacts/engine_bench_trace.json
 """
 from __future__ import annotations
 
@@ -913,6 +922,132 @@ def _run_tiers(out_path=None, replacement="both", cold_dtype="both",
     return results
 
 
+def _run_trace(out_path=None, log=print):
+    """Telemetry-trace mode: the tiered paged engine with the runtime
+    telemetry layer on (``src/repro/serving/telemetry.py``), pinned
+    against a telemetry-off twin, writing a Chrome-trace artifact.
+
+    Three runs of the same shared-prefix workload through the paged
+    engine with a 4-shard tiered expert store (so at least two copy
+    channels carry traffic): a single-host token-stream reference, a
+    telemetry-off tiered run, and a telemetry-on tiered run. Asserts the
+    zero-overhead contract — telemetry on/off produce token-identical
+    streams and identical deterministic engine stats (everything except
+    the wall-clock ``latency`` summary) — then writes the on-run's
+    ``Telemetry.to_chrome_trace()`` JSON with the predictor
+    ``scoreboard`` section riding in the same file (Perfetto ignores
+    unknown top-level keys). ``tools/check_trace.py`` validates the
+    artifact in CI."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.policies import NextLayerAllPolicy
+    from repro.core.tracing import moe_layer_ids
+    from repro.launch.dryrun import decode_layer_roofline
+    from repro.data import make_topic_corpus
+    from repro.models import build_model
+    from repro.serving.config import ServeConfig
+    from repro.serving.expertstore import TierConfig
+    from repro.serving.scheduler import BatchedOffloadEngine
+    from repro.serving.telemetry import Telemetry
+
+    t0 = time.time()
+    cfg = get_reduced("deepseek-v2-lite")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = make_topic_corpus(cfg.vocab_size, n_topics=4, seed=0)
+    # shared 16-token system prefix -> the prefix cache has adoptions
+    prompts = _prefix_workload(cfg, corpus, n_requests=6, sys_len=16,
+                               tail_len=6, seed=7)
+
+    n_moe = len(moe_layer_ids(cfg))
+    e = cfg.moe.num_experts
+    n_total = n_moe * e
+    batch, max_new, cache_len = 4, 6, 48
+    pol = NextLayerAllPolicy(e)
+    cap = max(batch * cfg.moe.top_k, n_total // 3)
+
+    def build(tel, tiers=None, host_bw=100e9):
+        serve = ServeConfig(max_batch=batch, block_size=8,
+                            prefix_cache=True,
+                            layer_compute_s="roofline" if tiers else 0.0,
+                            tiers=tiers, telemetry=tel)
+        return BatchedOffloadEngine(model, params, pol, cap,
+                                    host_bw=host_bw, serve=serve)
+
+    # single-host reference: the tiered runs must not change a token
+    ref = build(None)
+    ref_out = ref.generate(prompts, max_new=max_new, cache_len=cache_len)
+    expert_bytes = ref.core.store.bytes_per_expert
+
+    # tier hardware model scaled to this arch's roofline, as in the
+    # --tiers sweep: slow-tier fetches cost layers of compute, so the
+    # channel tracks carry visible transfer spans
+    per_layer = decode_layer_roofline(cfg, batch=batch)
+    mean_layer = sum(a + f for a, f in per_layer) / len(per_layer)
+    shards = 4
+    dram = max(1, n_total // (shards * 4))
+    disk_per_layer = max(1, (n_total - shards * dram) // n_moe)
+    peer_per_layer = max(1, (shards - 1) * dram // n_moe)
+    dur_disk = 2.2 * mean_layer / disk_per_layer
+    dur_peer = 1.5 * mean_layer / peer_per_layer
+    tc = TierConfig(num_shards=shards, shard_dram_experts=dram,
+                    cache_experts=max(2, n_total // 6),
+                    peer_latency_s=0.3 * dur_peer,
+                    peer_bw=expert_bytes / (0.7 * dur_peer),
+                    disk_latency_s=0.3 * dur_disk,
+                    disk_bw=expert_bytes / (0.7 * dur_disk),
+                    horizons=(1, 1, 2, 3))
+    host_bw = expert_bytes * e / (0.4 * mean_layer)
+
+    def det_stats(eng):
+        d = eng.stats.as_dict()
+        d.pop("latency")          # wall-clock, legitimately differs
+        return d
+
+    off = build(None, tiers=tc, host_bw=host_bw)
+    off_out = off.generate(prompts, max_new=max_new, cache_len=cache_len)
+    off.core.store.close()
+
+    tel = Telemetry()
+    on = build(tel, tiers=tc, host_bw=host_bw)
+    on_out = on.generate(prompts, max_new=max_new, cache_len=cache_len)
+    on.core.store.close()
+
+    assert on_out == off_out == ref_out, \
+        "telemetry (or the tiered store) changed a token stream"
+    assert det_stats(on) == det_stats(off), \
+        "telemetry changed the engine's deterministic stats"
+
+    trace = tel.to_chrome_trace()
+    trace["scoreboard"] = tel.scoreboard(bucket_s=0.25)
+    trace["wall_s"] = time.time() - t0
+
+    evs = trace["traceEvents"]
+    req_tracks = sum(1 for ev in evs if ev.get("ph") == "M"
+                     and ev.get("name") == "thread_name"
+                     and ev.get("pid") == 1)
+    chan_tracks = sum(1 for ev in evs if ev.get("ph") == "M"
+                      and ev.get("name") == "thread_name"
+                      and ev.get("pid") == 2)
+    total = trace["scoreboard"]["total"]
+    log(f"  trace: {len(evs)} events, {req_tracks} request tracks, "
+        f"{chan_tracks} channel tracks, "
+        f"{len(trace['scoreboard']['windows'])} scoreboard windows")
+    log(f"  predictor: precision={total['precision']:.3f} "
+        f"recall={total['recall']:.3f} f1={total['f1']:.3f} "
+        f"tier01_hit_rate={total['t01_hit_rate']:.3f}")
+    log("  on/off parity: token streams identical, deterministic stats "
+        "identical")
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)),
+                    exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(trace, f, indent=2)
+        log(f"  wrote {out_path} (open in ui.perfetto.dev)")
+    return trace
+
+
 def _run_longctx(lengths, iters, out_path=None, log=print):
     """Build the untrained reduced backbone (attention timing only — parity
     is the tests' job), run the sweep, write the artifact."""
@@ -981,8 +1116,9 @@ def run(log=print):
 
 
 def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
-             tiers=False, slo=False, replacement="both", cold_dtype="both",
-             dispatch="fetch", sanitize=False, log=print):
+             tiers=False, slo=False, trace=False, replacement="both",
+             cold_dtype="both", dispatch="fetch", sanitize=False,
+             log=print):
     """CI smoke: briefly-trained reduced backbone, no cached artifacts;
     writes the JSON artifact the workflow uploads. ``mixed`` switches to the
     ragged-length admission-latency / memory-high-water workload;
@@ -992,8 +1128,11 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
     the tiered expert-store sweep (untrained weights — stream parity and
     modeled stall); ``slo`` to the open-loop SLO load sweep (untrained
     weights — preemptive vs FIFO scheduling under Poisson traffic);
-    ``sanitize`` wraps any of the above in the retrace/leak sanitizer
-    layer and adds a ``"sanitizer"`` section to the artifact."""
+    ``trace`` to the telemetry-trace mode (untrained weights — Chrome
+    trace + predictor scoreboard artifact, telemetry on/off parity
+    asserted); ``sanitize`` wraps any of the above in the retrace/leak
+    sanitizer layer and adds a ``"sanitizer"`` section to the
+    artifact."""
     from repro.configs import get_reduced
     from repro.core.policies import NextLayerAllPolicy, NoPrefetchPolicy
     from repro.core.tracing import moe_layer_ids
@@ -1006,7 +1145,7 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
         with _SanitizerSession() as ses:
             results = run_tiny(out_path=None, mixed=mixed, longctx=longctx,
                                prefix=prefix, tiers=tiers, slo=slo,
-                               replacement=replacement,
+                               trace=trace, replacement=replacement,
                                cold_dtype=cold_dtype, dispatch=dispatch,
                                sanitize=False, log=log)
         # zero observed compile events would mean the hook is dead and the
@@ -1034,6 +1173,8 @@ def run_tiny(out_path=None, mixed=False, longctx=False, prefix=False,
     if slo:
         return _run_slo(n_requests=16, load_factors=(0.4, 1.5, 4.0),
                         out_path=out_path, log=log)
+    if trace:
+        return _run_trace(out_path=out_path, log=log)
     params, _ = train(arch, reduced=True, steps=30, batch_size=8,
                       seq_len=64, lr=3e-3, log=log)
     cfg = get_reduced(arch)
@@ -1125,6 +1266,11 @@ def main():
                            "FIFO scheduling — p50/p95/p99 TTFT, "
                            "goodput-under-SLO, preemption counts, with "
                            "streams pinned to an uncontended reference")
+    mode.add_argument("--trace", action="store_true",
+                      help="telemetry trace: tiered paged engine with the "
+                           "runtime telemetry layer on — Chrome-trace "
+                           "artifact (open in ui.perfetto.dev) with the "
+                           "predictor scoreboard, on/off parity asserted")
     ap.add_argument("--replacement", choices=("lru", "learned", "both"),
                     default="both",
                     help="--tiers only: eviction policies to sweep "
@@ -1155,11 +1301,13 @@ def main():
     elif args.slo and not args.tiny:
         _run_slo(n_requests=40, load_factors=(0.4, 1.0, 1.5, 2.5, 4.0),
                  out_path=args.out)
-    elif args.tiny or args.mixed or args.prefix or args.tiers or args.slo:
+    elif (args.tiny or args.mixed or args.prefix or args.tiers or args.slo
+          or args.trace):
         run_tiny(args.out, mixed=args.mixed, longctx=args.longctx,
                  prefix=args.prefix, tiers=args.tiers, slo=args.slo,
-                 replacement=args.replacement, cold_dtype=args.cold_dtype,
-                 dispatch=args.dispatch, sanitize=args.sanitize)
+                 trace=args.trace, replacement=args.replacement,
+                 cold_dtype=args.cold_dtype, dispatch=args.dispatch,
+                 sanitize=args.sanitize)
     else:
         results = run()
         if args.out:

@@ -1,6 +1,6 @@
 """The repo-specific lint rules (see ``linter.py`` for the engine).
 
-Five contracts, each born from a bug class this stack can actually have:
+Six contracts, each born from a bug class this stack can actually have:
 
   * ``refcount-pairing`` — a module that acquires references
     (``retain``/``pin``/``fill``/``try_reserve``) must contain the paired
@@ -24,6 +24,11 @@ Five contracts, each born from a bug class this stack can actually have:
   * ``parity-pin`` — every ``ServeConfig``/``TierConfig`` knob must be
     referenced by at least one module under ``tests/``: an un-pinned knob
     is a code path CI never exercises.
+  * ``metric-registration`` — every literal metric name passed to a
+    telemetry ``.counter()``/``.gauge()``/``.histogram()`` call must be a
+    key of the central ``METRICS`` catalogue
+    (``src/repro/serving/telemetry.py``), so a typo'd metric name is a
+    lint finding instead of a silently-empty time series.
 
 All rules are pure-AST/stdlib: the lint CI job needs no jax install.
 """
@@ -557,6 +562,65 @@ class ParityPinRule(Rule):
                             "never exercises")
 
 
+# ---------------------------------------------------------------------------
+# rule 6: metric-registration
+# ---------------------------------------------------------------------------
+
+#: telemetry emit methods whose first positional arg is a metric name
+_METRIC_EMITTERS = ("counter", "gauge", "histogram")
+
+
+class MetricRegistrationRule(Rule):
+    rule_id = "metric-registration"
+    description = ("literal metric names passed to telemetry counter/"
+                   "gauge/histogram calls must be keys of the METRICS "
+                   "catalogue")
+
+    @staticmethod
+    def _catalogue(project: Project) -> Optional[Set[str]]:
+        """Literal string keys of a module-level ``METRICS = {...}``."""
+        for mod in project.modules:
+            for node in mod.tree.body:
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == "METRICS"
+                        and isinstance(node.value, ast.Dict)):
+                    continue
+                keys = set()
+                for k in node.value.keys:
+                    if isinstance(k, ast.Constant) \
+                            and isinstance(k.value, str):
+                        keys.add(k.value)
+                return keys
+        return None
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        known = self._catalogue(project)
+        if known is None:  # no catalogue module in this project: no rule
+            return
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _METRIC_EMITTERS
+                        and node.args):
+                    continue
+                first = node.args[0]
+                # only literal names are checkable (np.histogram(arr, ...)
+                # and dynamic names pass through untouched)
+                if not (isinstance(first, ast.Constant)
+                        and isinstance(first.value, str)):
+                    continue
+                if first.value not in known:
+                    yield Diagnostic(
+                        mod.rel, node.lineno, self.rule_id,
+                        f"metric name '{first.value}' is not registered "
+                        "in the METRICS catalogue "
+                        "(repro/serving/telemetry.py) — register it or "
+                        "fix the typo")
+
+
 def default_rules() -> List[Rule]:
     """The shipped rule set, in reporting order."""
     return [
@@ -565,4 +629,5 @@ def default_rules() -> List[Rule]:
         BucketDisciplineRule(),
         StatsRegistrationRule(),
         ParityPinRule(),
+        MetricRegistrationRule(),
     ]

@@ -68,7 +68,7 @@ class CacheStats:
 
 class ExpertCache:
     def __init__(self, capacity: int, policy: str = "lru", on_evict=None,
-                 on_insert=None, scorer=None):
+                 on_insert=None, scorer=None, telemetry=None):
         assert capacity >= 1
         assert policy in ("lru", "lfu", "learned")
         assert policy != "learned" or scorer is not None, \
@@ -89,6 +89,10 @@ class ExpertCache:
         self._freq: dict[Hashable, int] = {}
         self._pins: dict[Hashable, int] = {}   # key -> refcount
         self.stats = CacheStats()
+        # optional serving.telemetry.Telemetry: evictions are reported
+        # with the victim's provenance + which policy mode chose it (a
+        # pure observer — None, the default, records nothing)
+        self.tel = telemetry
 
     def __contains__(self, key) -> bool:
         return key in self._entries
@@ -127,15 +131,29 @@ class ExpertCache:
                 f"{self.capacity} is too small for the concurrent working set")
         if self.policy == "lru":
             victim = evictable[0]            # OrderedDict order == LRU order
+            mode = "lru"
         elif self.policy == "lfu":           # LRU tie-break via dict order
             victim = min(evictable,
                          key=lambda k: (self._freq.get(k, 0),))
+            mode = "lfu"
         else:
+            informed = self.stats.evictions_learned
             victim = self._learned_victim(evictable)
+            mode = ("learned" if self.stats.evictions_learned > informed
+                    else "lru-fallback")
+        provenance = self._entries[victim]
         del self._entries[victim]
         if self.on_evict is not None:
             self.on_evict(victim)
         self.stats.evictions += 1
+        if self.tel is not None and self.tel.enabled:
+            from repro.serving.telemetry import PID_ENGINE
+            self.tel.counter("cache.evictions")
+            self.tel.instant(
+                PID_ENGINE, 1, "evict",
+                {"key": str(victim), "mode": mode,
+                 "provenance": ("demand" if provenance is None
+                                else f"prefetch-d{provenance}")})
 
     def _learned_victim(self, evictable):
         """The unpinned key predicted furthest from reuse. A key with no

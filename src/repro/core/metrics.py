@@ -72,6 +72,60 @@ def prediction_hit_rate(pred_sets, true_sets) -> float:
     return hits / max(total, 1)
 
 
+def prf_from_counts(tp: float, fp: float, fn: float):
+    """(precision, recall, micro-F1) from summed confusion counts — the
+    single formula shared by :func:`f1_over_window` and the telemetry
+    scoreboard, so per-window rows aggregate exactly to run totals
+    (micro-F1 composes over count sums; averaged F1 values do not).
+    Empty denominators follow the zero_division=0 convention."""
+    precision = tp / max(tp + fp, 1)
+    recall = tp / max(tp + fn, 1)
+    f1 = 2 * tp / max(2 * tp + fp + fn, 1)
+    return precision, recall, f1
+
+
+@dataclass
+class WindowF1:
+    """Micro-averaged predictor quality over one scoring window.
+
+    ``tp``/``fp``/``fn`` are confusion counts summed over the window's
+    (predicted set, routed set) pairs; ``precision``/``recall``/``f1``
+    derive from them via :func:`prf_from_counts`. Adding two windows'
+    counts and re-deriving gives the exact combined-window figures."""
+    tp: int = 0
+    fp: int = 0
+    fn: int = 0
+
+    @property
+    def precision(self) -> float:
+        return prf_from_counts(self.tp, self.fp, self.fn)[0]
+
+    @property
+    def recall(self) -> float:
+        return prf_from_counts(self.tp, self.fp, self.fn)[1]
+
+    @property
+    def f1(self) -> float:
+        return prf_from_counts(self.tp, self.fp, self.fn)[2]
+
+
+def f1_over_window(predicted, actual) -> WindowF1:
+    """Micro P/R/F1 of paired expert-id sets over a window.
+
+    ``predicted``/``actual`` are parallel iterables of id collections
+    (one pair per MoE-layer visit). Consistency with the paper-era batch
+    helpers, pinned by tests: ``recall == prediction_hit_rate(predicted,
+    actual)``, ``precision == prediction_hit_rate(actual, predicted)``,
+    and ``f1`` equals the micro-F1 of the equivalent binary arrays."""
+    w = WindowF1()
+    for p, t in zip(predicted, actual):
+        ps, ts = set(int(e) for e in p), set(int(e) for e in t)
+        w.tp += len(ps & ts)
+        w.fp += len(ps - ts)
+        w.fn += len(ts - ps)
+    return w
+
+
 # ---------------------------------------------------------------------------
 # Serving-side latency / SLO metrics
 # ---------------------------------------------------------------------------

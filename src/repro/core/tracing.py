@@ -3,6 +3,11 @@
 Runs batch-1 autoregressive decoding on an MoE backbone and records, per
 generated token: token id, the backbone's token-embedding vector, and the
 routed expert ids at every MoE layer — the paper's trace schema.
+
+Not to be confused with ``repro/serving/telemetry.py``: that module
+records *runtime* observability traces (per-request span timelines,
+counters, Chrome-trace export) of the serving engine itself, whereas
+this one collects the *dataset* the activation predictor is trained on.
 """
 from __future__ import annotations
 

@@ -10,6 +10,7 @@ from dataclasses import dataclass
 from typing import Optional, Union
 
 from repro.serving.expertstore import TierConfig
+from repro.serving.telemetry import Telemetry
 from repro.serving.workload import SLO
 
 
@@ -91,6 +92,15 @@ class ServeConfig:
         one (lower = more urgent; only relative order matters).
       * ``default_slo`` — :class:`~repro.serving.workload.SLO` budgets
         applied to requests that don't carry their own (None = none).
+
+    Observability:
+      * ``telemetry`` — a :class:`~repro.serving.telemetry.Telemetry`
+        event bus the scheduler, engine, expert store, KV pool, prefix
+        cache and overlap tracker emit into (per-request span timelines,
+        Chrome-trace export, the predictor scoreboard). ``None``
+        (default) routes every emission to the shared no-op
+        ``NULL_TELEMETRY`` singleton — zero events recorded, streams and
+        stats identical to an un-instrumented build.
     """
     max_batch: int = 4
     paged: bool = True
@@ -107,6 +117,7 @@ class ServeConfig:
     preemption: bool = False
     default_priority: int = 0
     default_slo: Optional[SLO] = None
+    telemetry: Optional[Telemetry] = None
 
     def resolve_kernel(self) -> Optional[str]:
         """The backend string the engine threads into jitted attention

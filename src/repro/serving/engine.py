@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import LatencyStats
+from repro.core.metrics import LatencyStats, f1_over_window
 from repro.core.policies import PerRequestPolicy, Policy
 from repro.core.tracing import moe_layer_ids
 from repro.models import attention as attn_mod
@@ -51,6 +51,8 @@ from repro.models.common import ffn_apply, rms_norm
 from repro.serving.offload import (CHANNEL_SHIP, TIER_HOST, TIER_PEER,
                                    HostExpertStore, OverlapTracker,
                                    make_offload_cache)
+from repro.serving.telemetry import (NULL_TELEMETRY, PID_ENGINE,
+                                     PID_REQUESTS)
 
 
 def unstack_layers(cfg, params) -> List[dict]:
@@ -227,7 +229,8 @@ class DecodeCore:
                  max_batch: int = 1,
                  layer_compute_s: Union[float, str] = 0.0,
                  max_prefill_chunk: int = 8,
-                 kernel: Optional[str] = "auto", tiers=None):
+                 kernel: Optional[str] = "auto", tiers=None,
+                 telemetry=None):
         cfg = model.cfg
         assert cfg.moe is not None, "offload engine needs an MoE backbone"
         self.cfg = cfg
@@ -247,6 +250,16 @@ class DecodeCore:
         # same rule at the scheduler level and passes the resolved value)
         from repro.kernels.runtime import default_kernel_backend
         self.kernel = default_kernel_backend() if kernel == "auto" else kernel
+        # telemetry: a pure observer every subsystem below shares. The
+        # default is the module-wide no-op singleton, so un-instrumented
+        # engines pay one attribute read per guarded site — and the
+        # scoreboard capture (_submit_prefetch/_moe_units) is skipped
+        # entirely, keeping streams and stats bit-identical either way.
+        self.tel = telemetry if telemetry is not None else NULL_TELEMETRY
+        self.tel.ensure_track(PID_ENGINE, 1, "decode driver")
+        # raw (pre-gating, pre-clamp) distance-0 predicted key sets per
+        # MoE ordinal, consumed by _moe_units for the predictor scoreboard
+        self._pred_d0: Dict[int, set] = {}
 
         # host store gets the routed-expert weights; everything else stays
         # in self.layers (device). ``tiers`` (a TierConfig) swaps the
@@ -266,7 +279,8 @@ class DecodeCore:
         if tiers is not None:
             from repro.serving.expertstore import TieredExpertStore
             self.store = TieredExpertStore(store_layers, tiers,
-                                           scorer=self.scorer)
+                                           scorer=self.scorer,
+                                           telemetry=self.tel)
         else:
             self.store = HostExpertStore(store_layers)
         # compute dispatch (TierConfig.dispatch = "ship"/"auto"): price
@@ -292,14 +306,15 @@ class DecodeCore:
         # how many MoE layers ahead predictions are asked for: the store's
         # deepest tier decides (single host -> 1, the original behaviour)
         self.max_horizon = self.store.max_horizon
-        self.tracker = OverlapTracker(host_bw)
+        self.tracker = OverlapTracker(host_bw, telemetry=self.tel)
         # a step's units can route to at most units*top_k distinct experts,
         # which bounds how many ephemeral ship rows one program may stage
         ship_slots = (max(max_batch, max_prefill_chunk) * cfg.moe.top_k
                       if self.planner is not None else 0)
         self.cache, self.slots = make_offload_cache(
             self.store, capacity, eviction, host_bw, tracker=self.tracker,
-            scorer=self.scorer, ship_slots=ship_slots)
+            scorer=self.scorer, ship_slots=ship_slots,
+            telemetry=self.tel)
         self.stats = EngineStats()
         self._init_layer_compute(layer_compute_s)
         self._tok_emb_np = np.asarray(params["tok_emb"], np.float32)
@@ -573,6 +588,8 @@ class DecodeCore:
         # insertions are.
         plan = []
         deep_budget, clamped = 0, False
+        tel_on = self.tel.enabled
+        raw0: set = set()
         for d, mi in enumerate(mis):
             rows = []
             if self.planner is not None:
@@ -586,6 +603,12 @@ class DecodeCore:
                 if scored:
                     pred, conf = pred
                 keys = [(mi, int(e)) for e in pred]
+                if tel_on and d == 0:
+                    # scoreboard capture: the RAW next-layer prediction,
+                    # before the planner/horizon/fit filters prune what
+                    # actually gets prefetched — predictor quality is
+                    # about what the model said, not what fit
+                    raw0.update(keys)
                 if self.scorer is not None and keys:
                     self.scorer.record(keys, distance=d)
                 if self.planner is not None:
@@ -627,6 +650,17 @@ class DecodeCore:
             for keys in rows:
                 if keys:
                     self.cache.prefetch(keys, horizon=d)
+        if tel_on:
+            self._pred_d0[mis[0]] = raw0
+            submitted = sum(len(keys) for _, rows in plan for keys in rows)
+            self.tel.counter("prefetch.submitted", submitted)
+            if clamped:
+                self.tel.counter("prefetch.clamps")
+            self.tel.instant(PID_ENGINE, 1, "prefetch",
+                             {"li_from": li_from, "window": len(mis),
+                              "submitted": submitted, "clamped": clamped,
+                              "confidence_gated":
+                                  self._conf_threshold is not None})
 
     # ------------------------------------------------------------------
     def _moe_units(self, mi: int, lp, h, w, x, idx_np: np.ndarray,
@@ -668,6 +702,25 @@ class DecodeCore:
                 self.tracker.submit(key, wire, tier=CHANNEL_SHIP,
                                     duration=self.planner.ship_s(n_tok),
                                     coalesce=False)
+        tel_on = self.tel.enabled
+        miss_tier: Dict = {}
+        t01_hit = t01_miss = n_hit = n_miss = 0
+        if tel_on:
+            # predictor scoreboard: the raw distance-0 prediction captured
+            # by _submit_prefetch vs the experts the router actually used
+            # this layer visit (both as key sets, micro-counted)
+            actual = {(mi, int(e)) for i in range(n_real)
+                      for e in np.unique(idx_np[i])}
+            pred = self._pred_d0.pop(mi, None)
+            if pred is not None:
+                pw = f1_over_window([{e for _, e in pred}],
+                                    [{e for _, e in actual}])
+                self.tel.predictor_window(pw.tp, pw.fp, pw.fn)
+            # tier-of read-out BEFORE any access mutates residency: a
+            # miss served from the store's tier-1 host cache still counts
+            # toward the paper's tier-0/1 hit rate
+            miss_tier = {k: self.store.tier_of(k) for k in actual
+                         if k not in self.cache and k not in ship_slot}
         gts, pinned = [], []
         for i in range(n_real):                   # live units only
             gt = np.unique(idx_np[i])
@@ -679,10 +732,26 @@ class DecodeCore:
                 hit = self.cache.access(key)
                 self.stats.hits += int(hit)
                 self.stats.misses += int(not hit)
+                if tel_on:
+                    n_hit += int(hit)
+                    n_miss += int(not hit)
+                    if hit or miss_tier.get(key) == TIER_HOST:
+                        t01_hit += 1
+                    else:
+                        t01_miss += 1
                 # pin immediately: a later unit's demand fetch must not
                 # evict an expert this step still computes with
                 self.cache.pin(key)
                 pinned.append(key)
+        if tel_on:
+            if n_hit:
+                self.tel.counter("cache.hit", n_hit)
+            if n_miss:
+                self.tel.counter("cache.miss", n_miss)
+            if t01_hit:
+                self.tel.counter("cache.t01_hit", t01_hit)
+            if t01_miss:
+                self.tel.counter("cache.t01_miss", t01_miss)
         self.tracker.wait({(mi, int(e)) for gt in gts for e in gt})
         slot_idx = np.zeros(idx_np.shape, np.int32)
         slot_table = self.slots.slot_of
@@ -789,8 +858,19 @@ class DecodeCore:
         logits = np.asarray(self._unembed(self.params, x))[:n, 0]
         self.stats.tokens += n
         self.stats.steps += 1
-        self._calibrate(time.perf_counter() - t_wall)
+        wall = time.perf_counter() - t_wall
+        self._calibrate(wall)
         self._sync_stats()
+        if self.tel.enabled:
+            t0_s = self.tel.rel(t_wall)
+            self.tel.complete(PID_ENGINE, 1, "decode_step", t0_s, wall,
+                              {"batch": n})
+            self.tel.histogram("step.wall_s", wall)
+            for rid, p in zip(rids, pos):
+                tid = int(rid) + 1
+                self.tel.ensure_track(PID_REQUESTS, tid, f"req {rid}")
+                self.tel.complete(PID_REQUESTS, tid, "decode", t0_s, wall,
+                                  {"pos": int(p)})
         return logits, caches, experts_out
 
     # ------------------------------------------------------------------
@@ -858,8 +938,18 @@ class DecodeCore:
         self.stats.tokens += n
         self.stats.prefill_tokens += n
         self.stats.prefill_chunks += 1
-        self._calibrate(time.perf_counter() - t_wall)
+        wall = time.perf_counter() - t_wall
+        self._calibrate(wall)
         self._sync_stats()
+        if self.tel.enabled:
+            t0_s = self.tel.rel(t_wall)
+            tid = int(rid) + 1
+            self.tel.ensure_track(PID_REQUESTS, tid, f"req {rid}")
+            self.tel.complete(PID_REQUESTS, tid, "prefill", t0_s, wall,
+                              {"t0": int(t0), "n": n})
+            self.tel.complete(PID_ENGINE, 1, "prefill_chunk", t0_s, wall,
+                              {"rid": int(rid), "n": n})
+            self.tel.histogram("prefill.wall_s", wall)
         return logits, caches, experts_out
 
 
@@ -869,10 +959,12 @@ class OffloadEngine:
     def __init__(self, model, params, policy: Optional[Policy],
                  capacity: int, eviction: str = "lru",
                  host_bw: float = 100e9, expert_backend: str = "jnp",
-                 layer_compute_s: Union[float, str] = 0.0, tiers=None):
+                 layer_compute_s: Union[float, str] = 0.0, tiers=None,
+                 telemetry=None):
         self.core = DecodeCore(model, params, capacity, eviction, host_bw,
                                expert_backend, max_batch=1,
-                               layer_compute_s=layer_compute_s, tiers=tiers)
+                               layer_compute_s=layer_compute_s, tiers=tiers,
+                               telemetry=telemetry)
         self.cfg = self.core.cfg
         self.model = model
         self.params = params

@@ -415,7 +415,8 @@ class TieredExpertStore:
     """
 
     def __init__(self, expert_params_per_layer, tc: TierConfig,
-                 spill_dir: Optional[str] = None, scorer=None):
+                 spill_dir: Optional[str] = None, scorer=None,
+                 telemetry=None):
         assert tc.num_shards >= 1
         assert 0 <= tc.local_shard < tc.num_shards
         assert len(tc.horizons) == 4 and min(tc.horizons) >= 1
@@ -444,6 +445,9 @@ class TieredExpertStore:
                                        tc.seed)
         self.ledger = ResidencyLedger()
         self.stats = StoreStats()
+        # optional serving.telemetry.Telemetry: tier-1 promotions and
+        # demotions are counted (pure observer; None records nothing)
+        self.tel = telemetry
         # tier-1 LRU cache of promoted peer/disk experts (weights tuples)
         self._cache: "OrderedDict[Key, tuple]" = OrderedDict()
         # weights currently up in a device slot (fetch .. demote bracket):
@@ -633,6 +637,8 @@ class TieredExpertStore:
             if tier != TIER_HOST and self.tc.cache_experts > 0:
                 self._promote(key, w)
                 self.stats.promotions += 1
+                if self.tel is not None and self.tel.enabled:
+                    self.tel.counter("store.promotions")
         self._on_device[key] = w
         self.ledger.note_access(key)
         self.stats.count(tier, nbytes)
@@ -684,6 +690,8 @@ class TieredExpertStore:
             return
         self._promote(key, w if w is not None else self._materialize(key))
         self.stats.demotions += 1
+        if self.tel is not None and self.tel.enabled:
+            self.tel.counter("store.demotions")
 
     # -- tier-1 cache ------------------------------------------------------
     def _promote(self, key: Key, weights) -> None:

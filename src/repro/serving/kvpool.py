@@ -97,7 +97,7 @@ class KVBlockPool:
     reference and only returns the block to the free list at zero.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, telemetry=None):
         assert num_blocks >= 2, "need at least one block beyond scratch"
         assert block_size >= 1
         self.num_blocks = num_blocks
@@ -108,6 +108,9 @@ class KVBlockPool:
         self._ref: dict[int, int] = {}
         self._reserved = 0
         self.stats = PoolStats()
+        # optional serving.telemetry.Telemetry: alloc/release report the
+        # live-block level as a gauge (pure observer; None records nothing)
+        self.tel = telemetry
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -165,6 +168,8 @@ class KVBlockPool:
         self._ref[bid] = 1
         self.stats.allocs += 1
         self.stats.high_water = max(self.stats.high_water, len(self._ref))
+        if self.tel is not None and self.tel.enabled:
+            self.tel.gauge("kv.blocks_in_use", len(self._ref))
         return bid
 
     def retain(self, bid: int) -> None:
@@ -193,6 +198,8 @@ class KVBlockPool:
             del self._ref[bid]
             self._free.append(bid)
             self.stats.releases += 1
+            if self.tel is not None and self.tel.enabled:
+                self.tel.gauge("kv.blocks_in_use", len(self._ref))
 
     def check_leaks(self, expected_in_use: int | None = None) -> None:
         """Invariant check: every block is either free or refcounted, scratch

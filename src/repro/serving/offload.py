@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import ExpertCache
+from repro.serving.telemetry import (NULL_TELEMETRY, PID_CHANNELS,
+                                     PID_ENGINE)
 
 Key = Tuple[int, int]  # (moe_layer_index, expert_id)
 
@@ -51,6 +53,15 @@ TIER_DEVICE, TIER_HOST, TIER_PEER, TIER_DISK = 0, 1, 2, 3
 # Ship traffic rides its own serial channel so stall/overlap attribution
 # separates "waiting on weights" from "waiting on remote compute".
 CHANNEL_SHIP = 4
+
+# Telemetry track names for the per-tier serial channels (the async
+# tracks a Chrome-trace export shows under the "channels" process)
+CHANNEL_NAMES = {
+    TIER_HOST: "tier1 host->device",
+    TIER_PEER: "tier2 peer->device",
+    TIER_DISK: "tier3 disk->device",
+    CHANNEL_SHIP: "ship tokens->peer",
+}
 
 
 @dataclass
@@ -140,8 +151,12 @@ class OverlapTracker:
     wins. ``fetches_deduped`` counts the coalesced submissions.
     """
 
-    def __init__(self, host_bw: float = 100e9):
+    def __init__(self, host_bw: float = 100e9, telemetry=None):
         self.host_bw = host_bw
+        # telemetry: each real (non-coalesced) submission becomes one
+        # "X" event on its tier's channel track, timed on the MODELED
+        # clock — serial channels make each track's timestamps monotonic
+        self.tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self.clock = 0.0
         self._channel_free: Dict[int, float] = {}  # tier -> busy-until time
         self.pending: Dict[Key, float] = {}   # key -> modeled completion time
@@ -192,6 +207,15 @@ class OverlapTracker:
         self._tier[key] = tier
         if coalesce:
             self._wire[key] = (fresh, dur, tier)
+        if self.tel.enabled:
+            self.tel.ensure_track(PID_CHANNELS, tier,
+                                  CHANNEL_NAMES.get(tier, f"tier{tier}"))
+            name = "ship" if tier == CHANNEL_SHIP else "fetch"
+            self.tel.complete(PID_CHANNELS, tier, name, fresh - dur, dur,
+                              {"key": str(key), "bytes": int(nbytes),
+                               "tier": tier})
+            self.tel.counter("ship.bytes" if tier == CHANNEL_SHIP
+                             else "fetch.bytes", int(nbytes))
         return False
 
     def _prune_wire(self) -> None:
@@ -224,6 +248,11 @@ class OverlapTracker:
         self.stall_s += stall
         self.stall_by_tier[crit_tier] = (
             self.stall_by_tier.get(crit_tier, 0.0) + stall)
+        if self.tel.enabled and stall > 0:
+            self.tel.counter("stall.s", stall)
+            self.tel.instant(PID_ENGINE, 1, "stall",
+                             {"stall_s": stall,
+                              "critical_tier": crit_tier})
         # transfer time not hidden by compute is stall; distribute the
         # hidden remainder over tiers, absorbing the stall into the
         # latest-completing transfers first (the critical path)
@@ -347,15 +376,18 @@ class SlotBuffer:
 def make_offload_cache(store: HostExpertStore, capacity: int,
                        eviction: str = "lru", host_bw: float = 100e9,
                        tracker: Optional[OverlapTracker] = None,
-                       scorer=None, ship_slots: int = 0):
+                       scorer=None, ship_slots: int = 0, telemetry=None):
     """(ExpertCache, SlotBuffer) wired together. ``scorer`` (a
     ``core.policies.ReuseDistanceScorer``) is required for
     ``eviction="learned"`` — the engine feeds it the multi-horizon
     prediction window so tier-0 eviction picks the key predicted furthest
     from reuse. ``ship_slots`` sizes the buffer's ephemeral
-    compute-dispatch rows (see :class:`SlotBuffer`)."""
+    compute-dispatch rows (see :class:`SlotBuffer`). ``telemetry`` (a
+    ``serving.telemetry.Telemetry``) lets the cache report evictions with
+    victim provenance."""
     buf = SlotBuffer(store, capacity, host_bw, tracker,
                      ship_slots=ship_slots)
     cache = ExpertCache(capacity, eviction, on_evict=buf.release,
-                        on_insert=buf.fill, scorer=scorer)
+                        on_insert=buf.fill, scorer=scorer,
+                        telemetry=telemetry)
     return cache, buf

@@ -102,7 +102,7 @@ class PrefixCache:
     """
 
     def __init__(self, pool: KVBlockPool,
-                 max_blocks: Optional[int] = None):
+                 max_blocks: Optional[int] = None, telemetry=None):
         self.pool = pool
         self.bs = pool.block_size
         self.max_blocks = max_blocks
@@ -110,6 +110,9 @@ class PrefixCache:
         self._nodes = 0
         self._tick = 0
         self.stats = PrefixStats()
+        # optional serving.telemetry.Telemetry: pressure evictions are
+        # reported per freed block (pure observer; None records nothing)
+        self.tel = telemetry
 
     @property
     def cached_blocks(self) -> int:
@@ -313,4 +316,6 @@ class PrefixCache:
                 self._nodes -= 1
                 freed += 1
                 self.stats.evicted_blocks += 1
+        if freed and self.tel is not None and self.tel.enabled:
+            self.tel.counter("prefix.evicted_blocks", freed)
         return freed

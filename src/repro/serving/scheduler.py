@@ -60,6 +60,7 @@ from repro.serving.config import ServeConfig
 from repro.serving.engine import DecodeCore, EngineStats, sample_token
 from repro.serving.kvpool import BlockTable, KVBlockPool, blocks_for
 from repro.serving.prefixcache import PrefixCache, PrefixMatch
+from repro.serving.telemetry import PID_ENGINE, PID_REQUESTS
 from repro.serving.workload import SLO, WorkloadRequest
 
 
@@ -83,6 +84,9 @@ class Request:
     lane: int = -1             # row for bounded per-row state
     seq: int = -1              # admission-order tiebreak within a priority
     arrival_s: float = 0.0     # perf_counter when request became visible
+    queued_s: float = 0.0      # perf_counter of the latest (re)queue —
+    #                            arrival, or the preemption that re-queued
+    #                            it (telemetry's queue-wait span start)
     admit_s: float = 0.0       # perf_counter at admission
     first_token_s: float = -1.0  # perf_counter at first sampled token
     preemptions: int = 0       # times evicted and re-admitted
@@ -198,7 +202,10 @@ class BatchedOffloadEngine:
                                layer_compute_s=serve.layer_compute_s,
                                max_prefill_chunk=self.prefill_chunk,
                                kernel=serve.resolve_kernel(),
-                               tiers=serve.tiers)
+                               tiers=serve.tiers,
+                               telemetry=serve.telemetry)
+        # the core resolved None -> NULL_TELEMETRY; share its choice
+        self.tel = self.core.tel
         self.cfg = self.core.cfg
         self.max_batch = max_batch
         self.paged = serve.paged and self.core.paged_ok
@@ -304,11 +311,12 @@ class BatchedOffloadEngine:
             raise ValueError(f"max_new must be >= 0, got {max_new}")
         rid = self._next_rid
         self._next_rid += 1
+        now = time.perf_counter()
         return Request(rid, prompt, max_new, temperature, seed,
                        priority=(self.serve.default_priority
                                  if priority is None else int(priority)),
                        slo=self.serve.default_slo if slo is None else slo,
-                       arrival_s=time.perf_counter())
+                       arrival_s=now, queued_s=now)
 
     def _push(self, req: Request) -> None:
         if req.seq < 0:
@@ -459,6 +467,12 @@ class BatchedOffloadEngine:
                 results[req.rid] = []
                 self.core.stats.rejected_requests += 1
                 self._finish_record(req, rejected=True)
+                if self.tel.enabled:
+                    self.tel.counter("sched.rejected")
+                    self.tel.instant(PID_ENGINE, 1, "reject",
+                                     {"rid": req.rid,
+                                      "need_blocks":
+                                          blocks_for(n_total, bs)})
                 continue
             if not self.pool.try_reserve(need):
                 # pool pressure may be cached prefixes nobody holds —
@@ -491,6 +505,23 @@ class BatchedOffloadEngine:
                 req.admit_s = time.perf_counter()
             req.table = BlockTable(self.pool, need)
             req.lane = lane
+            if self.tel.enabled:
+                tid = req.rid + 1
+                self.tel.ensure_track(PID_REQUESTS, tid, f"req {req.rid}")
+                now_s = self.tel.now()
+                q0 = self.tel.rel(req.queued_s)
+                self.tel.complete(PID_REQUESTS, tid, "queued", q0,
+                                  max(0.0, now_s - q0),
+                                  {"priority": req.priority,
+                                   "resumed": req.preemptions > 0})
+                self.tel.begin(PID_REQUESTS, tid, "request",
+                               {"rid": req.rid,
+                                "prompt_len": len(req.prompt),
+                                "max_new": req.max_new,
+                                "priority": req.priority,
+                                "resumed": req.preemptions > 0},
+                               ts=now_s)
+                self.tel.counter("sched.admitted")
             if self._policy is not None:
                 self._policy.begin_request(req.rid)
             if match:
@@ -498,6 +529,13 @@ class BatchedOffloadEngine:
                 req.t = match.tokens             # prefill starts here
                 self.prefix.stats.hits += 1
                 self.prefix.stats.hit_tokens += match.tokens
+                if self.tel.enabled:
+                    self.tel.counter("prefix.adopted_blocks",
+                                     len(match.bids))
+                    self.tel.instant(PID_REQUESTS, req.rid + 1,
+                                     "prefix-adopt",
+                                     {"blocks": len(match.bids),
+                                      "tokens": match.tokens})
                 self._replay(req, match.experts)
             elif self.prefix is not None:
                 self.prefix.stats.misses += 1
@@ -555,6 +593,15 @@ class BatchedOffloadEngine:
         victim.lane = -1
         victim.preemptions += 1
         self.core.stats.preemptions += 1
+        victim.queued_s = time.perf_counter()
+        if self.tel.enabled:
+            tid = victim.rid + 1
+            self.tel.instant(PID_REQUESTS, tid, "preempt",
+                             {"priority": victim.priority,
+                              "tokens_done": victim.t,
+                              "preemptions": victim.preemptions})
+            self.tel.end(PID_REQUESTS, tid, "request")
+            self.tel.counter("sched.preemptions")
         if self._policy is not None:
             # the per-request predictor restarts on resume; the prefix
             # index's recorded activations are replayed into the fresh
@@ -574,6 +621,13 @@ class BatchedOffloadEngine:
         results[req.rid] = req.generated
         self._record_ttft(req)
         self._finish_record(req)
+        if self.tel.enabled:
+            tid = req.rid + 1
+            self.tel.instant(PID_REQUESTS, tid, "retire",
+                             {"tokens_out": len(req.generated),
+                              "preemptions": req.preemptions})
+            self.tel.end(PID_REQUESTS, tid, "request")
+            self.tel.counter("sched.retired")
         self._insert_prefix(req)         # index prompt blocks before release
         req.table.release()
         if self.prefix is not None:
@@ -642,6 +696,10 @@ class BatchedOffloadEngine:
             if node is None:
                 break
             req.table.adopt([node.bid])
+            if self.tel.enabled:
+                self.tel.counter("prefix.adopted_blocks")
+                self.tel.instant(PID_REQUESTS, req.rid + 1,
+                                 "prefix-extend", {"block": req.t // bs})
             end = min(req.t + bs, req.prefill_end)
             if end == req.t + bs:
                 # a whole adopted block is one allocation this request will
@@ -673,6 +731,7 @@ class BatchedOffloadEngine:
             req = self._make_request(wr.prompt, wr.max_new, wr.temperature,
                                      wr.seed, wr.priority, wr.slo)
             req.arrival_s = t0 + wr.arrival_s
+            req.queued_s = req.arrival_s
             self._push(req)
 
     def _run_paged(self, cache_len: int,
@@ -685,9 +744,10 @@ class BatchedOffloadEngine:
         # cache_len=0 (every request degenerate-retires) still needs the
         # scratch block plus one allocatable block for the pool to exist
         num_blocks = max(num_blocks, 2)
-        self.pool = KVBlockPool(num_blocks, bs)
+        self.pool = KVBlockPool(num_blocks, bs, telemetry=self.tel)
         # the index is per pool: block ids are meaningless across runs
-        self.prefix = (PrefixCache(self.pool, self.prefix_cache_blocks)
+        self.prefix = (PrefixCache(self.pool, self.prefix_cache_blocks,
+                                   telemetry=self.tel)
                        if self.prefix_enabled else None)
         caches = self.core.alloc_paged_caches(num_blocks, bs)
         self.kv_block_bytes = self.core.paged_block_bytes(caches)

@@ -241,6 +241,39 @@ def test_parity_pin_silent_without_tests_dir(tmp_path):
     assert report.ok
 
 
+def test_metric_registration_catches_unregistered_literal(tmp_path):
+    report = _lint(tmp_path, """\
+        METRICS = {"cache.hit": "tier-0 hits"}
+        """, """\
+        def record(tel):
+            tel.counter("cache.hit")
+            tel.counter("cache.hitz")       # typo: not in the catalogue
+            tel.gauge("kv.blocks", 3)       # never registered
+            tel.histogram(samples, 10)      # non-literal arg: not checked
+        """)
+    assert _rules_hit(report) == {"metric-registration"}
+    assert sorted(d.message.split("'")[1] for d in report.findings) == \
+        ["cache.hitz", "kv.blocks"]
+
+
+def test_metric_registration_clean_and_silent_without_catalogue(tmp_path):
+    report = _lint(tmp_path, """\
+        METRICS = {"cache.hit": "tier-0 hits", "stall.s": "stall seconds"}
+        """, """\
+        def record(tel, np):
+            tel.counter("cache.hit", 2)
+            tel.histogram("stall.s", 0.5)
+            np.histogram([1, 2, 3], bins=2)   # first arg not a str literal
+        """)
+    assert report.ok
+    # a project with no METRICS catalogue opts out of the rule entirely
+    report = _lint(tmp_path, """\
+        def record(tel):
+            tel.counter("anything.goes")
+        """)
+    assert report.ok
+
+
 # ---------------------------------------------------------------------------
 # suppressions
 

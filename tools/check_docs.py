@@ -41,6 +41,9 @@ DOCUMENTED_CLASSES = [
     ("repro.core.metrics", "RequestLatency"),
     ("repro.core.metrics", "LatencyStats"),
     ("repro.analysis.linter", "Diagnostic"),
+    ("repro.serving.telemetry", "Telemetry"),
+    ("repro.serving.telemetry", "Span"),
+    ("repro.serving.telemetry", "SeriesPoint"),
 ]
 
 MARKDOWN = ["README.md"] + sorted(

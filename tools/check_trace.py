@@ -1,0 +1,250 @@
+"""Chrome-trace artifact validator for the telemetry exporter (CI).
+
+Validates the ``trace_event`` JSON emitted by
+``Telemetry.to_chrome_trace`` (``src/repro/serving/telemetry.py``) and
+written by ``engine_bench --trace``:
+
+  * **schema** — every event carries the fields its phase requires
+    (``M`` metadata needs ``name``/``args.name``; ``B``/``E`` span edges
+    need ``ts``; ``X`` completes need ``ts`` + ``dur``; ``i`` instants
+    need ``ts``), numeric fields are numeric, and phases outside the
+    exporter's vocabulary are rejected;
+  * **monotonic timestamps** — within each ``(pid, tid)`` track, ``ts``
+    never decreases in file order (Perfetto tolerates disorder, but the
+    exporter guarantees order, so disorder means an emitter bug);
+  * **balanced spans** — ``B``/``E`` events nest like a stack per track
+    and every ``B`` is closed (auto-closed spans are fine: the exporter
+    marks them ``args.auto_closed``);
+  * **named tracks** — every ``pid`` referenced by an event has a
+    ``process_name`` metadata event and every ``(pid, tid)`` a
+    ``thread_name`` one, so the Perfetto UI never shows bare numbers;
+  * **scoreboard consistency** — when the artifact carries the
+    predictor ``scoreboard`` section, per-window tp/fp/fn must sum to
+    the run-level totals and each F1 must equal ``2tp / (2tp+fp+fn)``.
+
+``--min-request-tracks`` / ``--min-channel-tracks`` additionally gate
+the number of named threads under the ``requests`` / ``channels``
+processes — the bench uses them to prove the trace actually contains
+per-request timelines and async copy-channel tracks.
+
+Usage (from the repo root):
+  PYTHONPATH=src python -m benchmarks.engine_bench --tiny --trace \
+      --out artifacts/engine_bench_trace.json
+  python tools/check_trace.py artifacts/engine_bench_trace.json \
+      --min-request-tracks 1 --min-channel-tracks 2
+
+Exit 0 = valid; 1 = one problem per line on stderr. Stdlib only, like
+the other ``tools/check_*.py`` gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Phases the exporter emits. Anything else in the artifact is a bug (the
+# validator is a contract check on our exporter, not a general Chrome
+# trace linter).
+KNOWN_PHASES = {"M", "B", "E", "X", "i"}
+METADATA_NAMES = {"process_name", "thread_name"}
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def load_events(doc):
+    """Return the event list from an artifact.
+
+    Accepts the object form (``{"traceEvents": [...]}``, what the
+    exporter writes) or a bare JSON array (also valid Chrome trace).
+    """
+    if isinstance(doc, list):
+        return doc
+    if isinstance(doc, dict) and isinstance(doc.get("traceEvents"), list):
+        return doc["traceEvents"]
+    raise ValueError("artifact is neither a traceEvents object nor an event array")
+
+
+def check_events(events):
+    """Validate schema, per-track monotonicity, span balance and naming.
+
+    Returns a list of problem strings (empty = valid).
+    """
+    problems = []
+    named_procs = set()
+    named_threads = set()
+    last_ts = {}
+    stacks = {}
+
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            problems.append(f"{where}: unknown phase {ph!r}")
+            continue
+        pid, tid = ev.get("pid"), ev.get("tid")
+        if not _is_num(pid) or not _is_num(tid):
+            problems.append(f"{where}: pid/tid missing or non-numeric")
+            continue
+
+        if ph == "M":
+            name = ev.get("name")
+            label = (ev.get("args") or {}).get("name")
+            if name not in METADATA_NAMES:
+                problems.append(f"{where}: metadata name {name!r} not in "
+                                f"{sorted(METADATA_NAMES)}")
+            elif not isinstance(label, str) or not label:
+                problems.append(f"{where}: {name} without args.name label")
+            elif name == "process_name":
+                named_procs.add(pid)
+            else:
+                named_threads.add((pid, tid))
+            continue
+
+        # Non-metadata events: need a timestamp, monotonic per track.
+        ts = ev.get("ts")
+        if not _is_num(ts):
+            problems.append(f"{where}: ph={ph} without numeric ts")
+            continue
+        track = (pid, tid)
+        if ts < last_ts.get(track, float("-inf")):
+            problems.append(f"{where}: ts {ts} < previous {last_ts[track]} "
+                            f"on track pid={pid} tid={tid}")
+        last_ts[track] = ts
+
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            problems.append(f"{where}: ph={ph} without a name")
+            continue
+        if ph == "X":
+            if not _is_num(ev.get("dur")) or ev["dur"] < 0:
+                problems.append(f"{where}: X event without non-negative dur")
+        elif ph == "B":
+            stacks.setdefault(track, []).append((i, ev["name"]))
+        elif ph == "E":
+            stack = stacks.setdefault(track, [])
+            if not stack:
+                problems.append(f"{where}: E {ev['name']!r} with no open B "
+                                f"on track pid={pid} tid={tid}")
+            else:
+                _, open_name = stack.pop()
+                if open_name != ev["name"]:
+                    problems.append(f"{where}: E {ev['name']!r} closes "
+                                    f"B {open_name!r} (bad nesting)")
+
+    for (pid, tid), stack in sorted(stacks.items()):
+        for i, name in stack:
+            problems.append(f"event[{i}]: B {name!r} never closed on track "
+                            f"pid={pid} tid={tid}")
+
+    used_pids = {ev.get("pid") for ev in events
+                 if isinstance(ev, dict) and ev.get("ph") in KNOWN_PHASES
+                 and _is_num(ev.get("pid"))}
+    used_tracks = {(ev.get("pid"), ev.get("tid")) for ev in events
+                   if isinstance(ev, dict)
+                   and ev.get("ph") in KNOWN_PHASES - {"M"}
+                   and _is_num(ev.get("pid")) and _is_num(ev.get("tid"))}
+    for pid in sorted(used_pids - named_procs):
+        problems.append(f"pid {pid} has events but no process_name metadata")
+    for pid, tid in sorted(used_tracks - named_threads):
+        problems.append(f"track pid={pid} tid={tid} has events but no "
+                        f"thread_name metadata")
+    return problems
+
+
+def track_names(events):
+    """Map process label -> list of thread labels under it."""
+    proc_label = {}
+    threads = {}
+    for ev in events:
+        if not isinstance(ev, dict) or ev.get("ph") != "M":
+            continue
+        label = (ev.get("args") or {}).get("name")
+        if ev.get("name") == "process_name":
+            proc_label[ev.get("pid")] = label
+        elif ev.get("name") == "thread_name":
+            threads.setdefault(ev.get("pid"), []).append(label)
+    return {label: threads.get(pid, []) for pid, label in proc_label.items()}
+
+
+def check_scoreboard(doc):
+    """Validate the scoreboard section, if present.
+
+    Windows must sum to the run-level totals and every F1 (per-window
+    and total) must match ``2tp / (2tp + fp + fn)``.
+    """
+    problems = []
+    if not isinstance(doc, dict) or "scoreboard" not in doc:
+        return problems
+    sb = doc["scoreboard"]
+    windows, total = sb.get("windows"), sb.get("total")
+    if not isinstance(windows, list) or not isinstance(total, dict):
+        return [f"scoreboard: expected windows list + total dict, got "
+                f"{type(windows).__name__}/{type(total).__name__}"]
+
+    def f1_of(row):
+        tp, fp, fn = row["tp"], row["fp"], row["fn"]
+        return 2 * tp / max(2 * tp + fp + fn, 1)
+
+    for field in ("tp", "fp", "fn", "t01_hits", "t01_misses"):
+        got = sum(w.get(field, 0) for w in windows)
+        want = total.get(field, 0)
+        if abs(got - want) > 1e-9:
+            problems.append(f"scoreboard: windows sum {field}={got} != "
+                            f"total {want}")
+    for label, row in [("total", total)] + [
+            (f"window[{i}]", w) for i, w in enumerate(windows)]:
+        if abs(row.get("f1", 0.0) - f1_of(row)) > 1e-9:
+            problems.append(f"scoreboard {label}: f1 {row.get('f1')} != "
+                            f"2tp/(2tp+fp+fn) = {f1_of(row)}")
+    return problems
+
+
+def check_artifact(doc, min_request_tracks=0, min_channel_tracks=0):
+    """Full validation; returns a list of problem strings."""
+    try:
+        events = load_events(doc)
+    except ValueError as e:
+        return [str(e)]
+    problems = check_events(events)
+    problems += check_scoreboard(doc)
+    names = track_names(events)
+    n_req = len(names.get("requests", []))
+    n_chan = len(names.get("channels", []))
+    if n_req < min_request_tracks:
+        problems.append(f"only {n_req} request track(s), need "
+                        f">= {min_request_tracks}")
+    if n_chan < min_channel_tracks:
+        problems.append(f"only {n_chan} channel track(s), need "
+                        f">= {min_channel_tracks}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="Chrome-trace JSON to validate")
+    ap.add_argument("--min-request-tracks", type=int, default=0,
+                    help="minimum named threads under the 'requests' process")
+    ap.add_argument("--min-channel-tracks", type=int, default=0,
+                    help="minimum named threads under the 'channels' process")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as f:
+        doc = json.load(f)
+    problems = check_artifact(doc, args.min_request_tracks,
+                              args.min_channel_tracks)
+    for p in problems:
+        print(f"check_trace: {p}", file=sys.stderr)
+    if not problems:
+        events = load_events(doc)
+        n_spans = sum(1 for e in events if e.get("ph") in ("B", "X"))
+        print(f"check_trace: OK ({len(events)} events, {n_spans} spans, "
+              f"{len(track_names(events))} processes)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
